@@ -1,0 +1,69 @@
+"""Fig. 1 — ZS pulse-budget vs SP-estimation accuracy trade-off.
+
+(a) offsets of the estimated SP mean/std vs pulse budget N on a device
+    array (paper: 512x512; reduced here), dw_min = 0.001.
+(b) smallest N reaching <=1% relative mean error as dw_min shrinks —
+    Thm 2.2's N = O(1/(delta * dw_min)) scaling.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import zs
+from repro.core.device import DeviceConfig, sample_device, symmetric_point
+
+
+def run(quick: bool = True) -> List[str]:
+    rows = []
+    side = 64 if quick else 256
+    key = jax.random.PRNGKey(0)
+
+    # (a) offset vs pulse budget
+    cfg = DeviceConfig(dw_min=0.001, sigma_pm=0.3, sigma_d2d=0.1, sigma_c2c=0.05)
+    dp = sample_device(key, (side, side), cfg)
+    sp = symmetric_point(dp, cfg)
+    true_mean, true_std = float(jnp.mean(sp)), float(jnp.std(sp))
+    budgets = [250, 500, 1000, 2000, 4000] if quick else [500, 1000, 2000, 4000, 8000]
+    est = jnp.zeros((side, side))
+    done = 0
+    t0 = time.time()
+    for n in budgets:
+        est = zs.zs_estimate(jax.random.fold_in(key, n), est, dp, cfg, n - done)
+        done = n
+        mean_off = true_mean - float(jnp.mean(est))
+        std_off = true_std - float(jnp.std(est))
+        rel_err = abs(mean_off) / max(abs(true_mean), 1e-9)
+        rows.append(f"fig1a_zs_offset_N{n},{(time.time()-t0)*1e6:.0f},"
+                    f"mean_off={mean_off:.5f};std_off={std_off:.5f};rel={rel_err:.3f}")
+
+    # (b) pulses to 1% mean error vs dw_min
+    dwmins = [0.02, 0.01, 0.005, 0.0025] if quick else [0.02, 0.01, 0.005, 0.0025, 0.00125]
+    for dw in dwmins:
+        cfg2 = DeviceConfig(dw_min=dw, sigma_pm=0.3, sigma_d2d=0.1, sigma_c2c=0.05)
+        dp2 = sample_device(jax.random.fold_in(key, 99), (side, side), cfg2)
+        sp2 = symmetric_point(dp2, cfg2)
+        tm = float(jnp.mean(sp2))
+        t0 = time.time()
+        w = jnp.zeros((side, side))
+        n_total = 0
+        found = -1
+        chunk_n = max(200, int(0.2 / dw))
+        while n_total < 80 / dw:
+            w = zs.zs_estimate(jax.random.fold_in(key, n_total), w, dp2, cfg2, chunk_n)
+            n_total += chunk_n
+            if abs(tm - float(jnp.mean(w))) / max(abs(tm), 1e-9) <= 0.01:
+                found = n_total
+                break
+        rows.append(f"fig1b_pulses_to_1pct_dwmin{dw},{(time.time()-t0)*1e6:.0f},"
+                    f"N={found};pred_scaling=1/dwmin")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

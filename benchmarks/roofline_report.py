@@ -1,0 +1,64 @@
+"""Aggregate the dry-run JSONs into the §Dry-run / §Roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+
+def load_cells(out_dir: str = "results/dryrun", tag: str = ""):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if (r.get("tag") or "") != tag:
+            continue
+        cells.append(r)
+    return cells
+
+
+def fmt_table(cells, mesh: str = "pod16x16") -> str:
+    hdr = ("| arch | shape | status | mem/dev GB | t_comp s | t_mem s | "
+           "t_coll s | bottleneck | useful | roofline frac |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in cells:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | skipped ({r['reason'][:40]}…) "
+                         "| - | - | - | - | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - | - | - | - | - |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['memory']['peak_per_device_gb']:.2f} "
+            f"| {rf['t_compute']:.3f} | {rf['t_memory']:.3f} | {rf['t_collective']:.3f} "
+            f"| {rf['bottleneck']} | {rf['useful_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True) -> List[str]:
+    cells = load_cells()
+    rows = []
+    n_ok = sum(1 for c in cells if c["status"] == "ok")
+    n_skip = sum(1 for c in cells if c["status"] == "skipped")
+    n_err = sum(1 for c in cells if c["status"] not in ("ok", "skipped"))
+    rows.append(f"roofline_cells,0,ok={n_ok};skipped={n_skip};errors={n_err}")
+    for c in cells:
+        if c["status"] != "ok":
+            continue
+        rf = c["roofline"]
+        rows.append(
+            f"roofline_{c['arch']}_{c['shape']}_{c['mesh']},0,"
+            f"bottleneck={rf['bottleneck']};frac={rf['roofline_fraction']:.4f};"
+            f"useful={rf['useful_ratio']:.3f};mem_gb={c['memory']['peak_per_device_gb']}")
+    return rows
+
+
+if __name__ == "__main__":
+    print(fmt_table(load_cells()))

@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--full`` runs the
+paper-scale sweeps (hours on this 1-core container); the default quick mode
+exercises every benchmark end-to-end at reduced scale.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1,table12]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+BENCHES = ("fig1", "fig2", "table12", "fig4", "ablations", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else set(BENCHES)
+
+    print("name,us_per_call,derived")
+    t_start = time.time()
+
+    def emit(rows):
+        for r in rows:
+            print(r, flush=True)
+
+    if "fig1" in only:
+        from . import fig1_zs
+        emit(fig1_zs.run(quick))
+    if "fig2" in only:
+        from . import fig2_sp_error
+        emit(fig2_sp_error.run(quick))
+    if "table12" in only:
+        from . import table12_robustness
+        emit(table12_robustness.run(quick))
+    if "fig4" in only:
+        from . import fig4_pulse_cost
+        emit(fig4_pulse_cost.run(quick))
+    if "ablations" in only:
+        from . import fig5_table9_10_ablations
+        emit(fig5_table9_10_ablations.run(quick))
+    if "roofline" in only:
+        from . import roofline_report
+        emit(roofline_report.run(quick))
+
+    print(f"total,{(time.time() - t_start) * 1e6:.0f},benchmarks_done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

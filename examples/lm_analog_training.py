@@ -1,0 +1,23 @@
+"""End-to-end driver: train a reduced LM with analog E-RIDER tiles for a
+few hundred steps on the synthetic bigram stream, with checkpointing and
+fault-tolerance machinery engaged — the same train_step the multi-pod
+dry-run lowers at full scale.
+
+Run: PYTHONPATH=src python examples/lm_analog_training.py [--steps 200]
+"""
+import sys
+
+from repro.launch import train
+
+
+def main():
+    argv = ["--arch", "qwen2-0.5b", "--smoke", "--steps", "200",
+            "--batch", "8", "--seq", "64", "--ckpt-dir", "/tmp/repro_lm_ckpt",
+            "--ckpt-every", "100", "--log-every", "20"]
+    # pass through any user overrides (e.g. --steps 500 --arch mamba2-2.7b)
+    argv.extend(sys.argv[1:])
+    train.main(argv)
+
+
+if __name__ == "__main__":
+    main()

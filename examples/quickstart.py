@@ -1,0 +1,56 @@
+"""Quickstart: E-RIDER analog training on a toy problem in ~40 lines.
+
+Shows the core API: device config -> tile config -> AnalogTrainer over any
+loss function. The SP-tracking telemetry (sp_err) demonstrates the paper's
+contribution live: Q converges to the device's symmetric point during
+training, with no pre-training calibration.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.device import DeviceConfig
+from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
+from repro.core.tile import TileConfig
+from repro.core.trainer import AnalogTrainer, TrainerConfig
+
+# a noisy least-squares problem: f(W) = 0.5 ||W - W*||^2
+W_STAR = jax.random.normal(jax.random.PRNGKey(1), (32, 32)) * 0.05
+
+
+def loss_fn(params, batch, rng):
+    noise = 0.02 * jax.random.normal(rng, params["w"].shape)
+    resid = params["w"] - W_STAR
+    surrogate = jnp.sum(params["w"] * jax.lax.stop_gradient(resid + noise))
+    return surrogate, {"true_loss": 0.5 * jnp.sum(resid ** 2)}
+
+
+def main():
+    # analog devices with a *nonzero, unknown* symmetric point (the paper's
+    # hard setting): per-element SP ~ N(0.3, 0.2^2)
+    dev_p = DeviceConfig(dw_min=0.01, sigma_pm=0.3, sigma_d2d=0.1,
+                         sigma_c2c=0.05, ref_mean=0.3, ref_std=0.2)
+    dev_w = DeviceConfig(dw_min=0.01, sigma_pm=0.3, sigma_d2d=0.1,
+                         sigma_c2c=0.05)
+    cfg = TrainerConfig(
+        tile=TileConfig(algorithm="erider", device_p=dev_p, device_w=dev_w,
+                        lr_p=0.5, lr_w=0.5, gamma=0.1, eta=0.3, chopper_p=0.1),
+        digital=DigitalOptConfig(kind="sgd"),
+        schedule=ScheduleConfig(kind="constant", base_lr=0.1),
+    )
+    trainer = AnalogTrainer(loss_fn, cfg, analog_filter=lambda p, l: True)
+    state = trainer.init(jax.random.PRNGKey(2), {"w": jnp.zeros((32, 32))})
+    step = trainer.jit_step()
+
+    print("step   loss     ||Q - w*||^2 (SP tracking)   pulses")
+    for i in range(601):
+        state, m = step(state, jnp.zeros(()))
+        if i % 100 == 0:
+            print(f"{i:5d}  {float(m['true_loss']):7.4f}  "
+                  f"{float(m['tile/sp_err']):10.4f}               "
+                  f"{float(m['tile/pulses']):6.0f}")
+
+
+if __name__ == "__main__":
+    main()

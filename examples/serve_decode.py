@@ -1,0 +1,20 @@
+"""Batched serving example: prefill + greedy decode over request batches,
+exercising the same serve_step the decode-shape dry-run cells lower
+(KV caches / recurrent state per layer family).
+
+Run: PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    argv = ["--arch", "mamba2-2.7b", "--smoke", "--requests", "8",
+            "--batch", "4", "--prompt-len", "24", "--gen", "16"]
+    argv.extend(sys.argv[1:])
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

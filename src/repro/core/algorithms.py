@@ -1,0 +1,223 @@
+"""The seven analog training algorithms over a unified tile interface.
+
+Every algorithm implements three pure functions:
+
+  begin_step(state, key, cfg)        -> state'        (pre-forward phase:
+                                                        chopper draw + E-RIDER
+                                                        Q-tilde sync, Alg.3 l.3-6)
+  effective_weight(state, cfg)       -> model weight   (what fwd/bwd sees)
+  update(state, grad, key, cfg, lr)  -> (state', metrics)
+
+``grad`` is the gradient w.r.t. the *model* weight returned by
+``effective_weight`` — i.e. exactly the paper's ∇f(W̄_k; ξ_k) chain.
+
+Algorithms (paper refs):
+  sgd       — plain Analog SGD (eq. 2); exhibits the SP drift of eq. (4).
+  ttv1      — Tiki-Taka v1 (Gokmen & Haensch 2020): fast array P + main W,
+              periodic analog transfer, fwd on W + γP.
+  ttv2      — Tiki-Taka v2 (Gokmen 2021): + digital hidden accumulator H with
+              thresholded transfer (forget-buffer).
+  agad      — AGAD (Rasch et al. 2024): chopped TT-v2; gradients evaluated at
+              the *main* array only (paper App. B.2).
+  residual  — two-stage Residual Learning + ZS (paper Alg. 4; Wu et al. 2025):
+              Q ≡ static SP estimate.
+  rider     — RIDER (paper Alg. 2): eq. (11a), (12), (11b).
+  erider    — E-RIDER (paper Alg. 3): chopper (17), updates (18a/18b),
+              periodic Q̃ programming on chopper flips.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .device import fg, symmetric_point
+from .pulse import analog_update
+from .tile import TileConfig, TileState, expected_pulses
+
+Metrics = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _au(x, dx, dev, dcfg, key, cfg: TileConfig):
+    return analog_update(x, dx, dev, dcfg, key, bl=cfg.bl, mode=cfg.pulse_mode,
+                         rng=cfg.rng)
+
+
+def _dev(st: TileState, which: str, cfg: TileConfig, shape):
+    """Fetch device params; regenerate from the tile seed when not stored
+    (store_device=False — DESIGN.md §3 memory/compute trade)."""
+    dev = st.get(f"dev_{which}")
+    if dev is not None:
+        return dev
+    from .device import sample_device
+
+    key = jax.random.wrap_key_data(st[f"seed_{which}"])
+    dcfg = cfg.device_p if which == "p" else cfg.device_w
+    return sample_device(key, shape, dcfg, method=cfg.rng)
+
+
+def _base_metrics(cfg: TileConfig, st: TileState, dw_p=None, dw_w=None) -> Metrics:
+    m: Metrics = {}
+    pulses = jnp.zeros((), jnp.float32)
+    if dw_p is not None:
+        pulses = pulses + expected_pulses(dw_p, cfg.device_p.dw_min, cfg.bl)
+    if dw_w is not None:
+        pulses = pulses + expected_pulses(dw_w, cfg.device_w.dw_min, cfg.bl)
+    m["pulses"] = pulses
+    has_dev_p = st.get("dev_p") is not None or st.get("seed_p") is not None
+    if st.get("P") is not None and has_dev_p:
+        dev_p = _dev(st, "p", cfg, st["P"].shape)
+        _, g = fg(st["P"].astype(jnp.float32), dev_p, cfg.device_p)
+        m["gp_sq"] = jnp.mean(g * g)
+        if st.get("Qd") is not None:
+            sp = symmetric_point(dev_p, cfg.device_p)
+            m["sp_err"] = jnp.mean((st["Qd"].astype(jnp.float32) - sp) ** 2)
+    return m
+
+
+def _grad_to_analog(st: TileState, grad, cfg: TileConfig):
+    """Model-space gradient -> analog-space gradient (chain through scale).
+
+    With grad_norm='absmean' the gradient is rescaled so a fast-LR of 1.0
+    delivers ~1 pulse per element per step regardless of device granularity
+    (the AIHWKit auto-granularity mechanism the paper's configs rely on).
+    """
+    g = grad.astype(jnp.float32) * st["scale"]
+    if cfg.grad_norm == "absmean":
+        g = g / (jnp.mean(jnp.abs(g)) + 1e-12) * cfg.device_p.dw_min
+    return g
+
+
+# ---------------------------------------------------------------------------
+# begin_step
+# ---------------------------------------------------------------------------
+
+
+def begin_step(st: TileState, key, cfg: TileConfig) -> TileState:
+    """Pre-forward phase: draw chopper c_k (17); E-RIDER syncs Q̃ on flips."""
+    if cfg.algorithm not in ("agad", "erider"):
+        return st
+    st = TileState(st)
+    flip = jax.random.bernoulli(key, cfg.chopper_p)
+    c_new = jnp.where(flip, -st["c"], st["c"])
+    st["c"] = c_new
+    if cfg.algorithm == "erider":
+        # Alg. 3 lines 4-6: on sign change, reprogram the analog Q̃ from the
+        # digital Q (weight programming event).
+        st["Qt"] = jnp.where(flip, st["Qd"], st["Qt"])
+        st["prog"] = st["prog"] + flip.astype(jnp.int32)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# effective weight (model space)
+# ---------------------------------------------------------------------------
+
+
+def effective_weight(st: TileState, cfg: TileConfig):
+    a = cfg.algorithm
+    w = st["W"].astype(jnp.float32)
+    if a == "sgd":
+        eff = w
+    elif a in ("ttv1", "ttv2"):
+        eff = w + cfg.gamma * st["P"].astype(jnp.float32)
+    elif a == "agad":
+        eff = w  # gradients on the main array only (App. B.2)
+    elif a == "residual":
+        eff = w + cfg.gamma * (st["P"] - st["Qd"]).astype(jnp.float32)
+    elif a == "rider":
+        eff = w + cfg.gamma * (st["P"] - st["Qd"]).astype(jnp.float32)
+    elif a == "erider":
+        eff = w + cfg.gamma * st["c"] * (st["P"] - st["Qt"]).astype(jnp.float32)
+    else:
+        raise ValueError(a)
+    # model-space weight in the tile's storage dtype (bf16 at LM scale)
+    return (eff * st["scale"]).astype(st["W"].dtype)
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+
+def update(
+    st: TileState, grad, key, cfg: TileConfig, lr
+) -> Tuple[TileState, Metrics]:
+    a = cfg.algorithm
+    st = TileState(st)
+    g = _grad_to_analog(st, grad, cfg)
+    kp, kw, kq = jax.random.split(key, 3)
+    alpha = lr * cfg.lr_p
+    beta = lr * cfg.lr_w
+    dev_w = _dev(st, "w", cfg, st["W"].shape)
+    dev_p = _dev(st, "p", cfg, st["W"].shape) if (
+        st.get("dev_p") is not None or st.get("seed_p") is not None) else None
+
+    if a == "sgd":
+        dw = -beta * g
+        st["W"] = _au(st["W"], dw, dev_w, cfg.device_w, kw, cfg)
+        metrics = _base_metrics(cfg, st, dw_w=dw)
+
+    elif a in ("ttv1", "ttv2", "agad"):
+        c = st["c"] if a == "agad" else jnp.ones((), jnp.float32)
+        dp = -alpha * c * g
+        st["P"] = _au(st["P"], dp, dev_p, cfg.device_p, kp, cfg)
+        do_transfer = (st["t"] % cfg.transfer_every) == 0
+        read = st["P"].astype(jnp.float32)  # analog readout of the fast array
+        if a == "ttv1":
+            dw = jnp.where(do_transfer, beta * read, 0.0)
+            st["W"] = _au(st["W"], dw, dev_w, cfg.device_w, kw, cfg)
+        else:
+            if a == "agad":
+                # Dynamic reference estimation (Rasch et al. 2024): an
+                # un-demodulated low-pass of the readout isolates the DC
+                # component = the fast array's drift point; transfers are
+                # demodulated *and* offset-corrected.
+                st["Qd"] = ((1.0 - cfg.eta) * st["Qd"].astype(jnp.float32)
+                            + cfg.eta * read).astype(st["Qd"].dtype)
+                read = read - st["Qd"].astype(jnp.float32)
+            # TT-v2 / AGAD: digital hidden accumulator with thresholded
+            # transfer and forget-buffer semantics.
+            thr = cfg.threshold * cfg.device_w.dw_min
+            h = st["H"] + jnp.where(do_transfer, beta * c * read, 0.0)
+            n = jnp.trunc(h / thr)
+            dw = n * thr
+            st["H"] = h - dw
+            st["W"] = _au(st["W"], dw, dev_w, cfg.device_w, kw, cfg)
+        metrics = _base_metrics(cfg, st, dw_p=dp, dw_w=dw)
+
+    elif a in ("residual", "rider", "erider"):
+        c = st["c"] if a == "erider" else jnp.ones((), jnp.float32)
+        # (11a)/(18a): P <- P - alpha c grad  (asymmetric pulse update)
+        dp = -alpha * c * g
+        st["P"] = _au(st["P"], dp, dev_p, cfg.device_p, kp, cfg)
+        p_new = st["P"].astype(jnp.float32)
+        # (11b)/(18b): W <- W + beta c (P_{k+1} - Q_k)
+        q_ref = st["Qt"] if a == "erider" else st["Qd"]
+        dw = beta * c * (p_new - q_ref.astype(jnp.float32))
+        if cfg.buffered_transfer:
+            # digital forget-buffer: emit only whole-pulse increments
+            thr = cfg.threshold * cfg.device_w.dw_min
+            h = st["H"] + dw
+            dw = jnp.trunc(h / thr) * thr
+            st["H"] = h - dw
+        st["W"] = _au(st["W"], dw, dev_w, cfg.device_w, kw, cfg)
+        # (12): digital EMA tracking (rider/erider only)
+        if a in ("rider", "erider"):
+            st["Qd"] = ((1.0 - cfg.eta) * st["Qd"].astype(jnp.float32)
+                        + cfg.eta * p_new).astype(st["Qd"].dtype)
+        metrics = _base_metrics(cfg, st, dw_p=dp, dw_w=dw)
+        if a == "erider":
+            metrics["prog_events"] = st["prog"].astype(jnp.float32)
+
+    else:
+        raise ValueError(a)
+
+    st["t"] = st["t"] + 1
+    return st, metrics

@@ -1,0 +1,118 @@
+"""Digital optimizers for the non-analog parameter branch (pure JAX).
+
+The paper keeps embeddings / norms / biases digital; those leaves are
+updated here with SGD(+momentum) or Adam(W), with optional global-norm
+clipping and weight decay, plus warmup-cosine LR schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DigitalOptConfig:
+    kind: str = "sgdm"          # sgd | sgdm | adam | adamw
+    lr_scale: float = 1.0       # multiplier on the global LR
+    momentum: float = 0.9
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 0.0      # 0 = off
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "constant"      # constant | cosine | linear
+    base_lr: float = 0.1
+    warmup_steps: int = 0
+    total_steps: int = 1000
+    min_ratio: float = 0.1
+
+
+def lr_at(step, cfg: ScheduleConfig):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    base = jnp.float32(cfg.base_lr)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(1.0, (s + 1.0) / cfg.warmup_steps)
+    else:
+        warm = 1.0
+    if cfg.kind == "constant":
+        decay = 1.0
+    elif cfg.kind == "cosine":
+        frac = jnp.clip((s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = cfg.min_ratio + (1 - cfg.min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.kind == "linear":
+        frac = jnp.clip((s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 1.0 - (1 - cfg.min_ratio) * frac
+    else:
+        raise ValueError(cfg.kind)
+    return base * warm * decay
+
+
+def init_opt(params, cfg: DigitalOptConfig) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32) if p is not None else None, params)
+    if cfg.kind in ("sgdm",):
+        return {"mu": zeros()}
+    if cfg.kind in ("adam", "adamw"):
+        return {"mu": zeros(), "nu": zeros()}
+    return {}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [g for g in jax.tree.leaves(grads) if g is not None]
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda g: g * scale if g is not None else None, grads), gnorm
+
+
+def apply_opt(params, grads, opt, step, lr, cfg: DigitalOptConfig):
+    """Update the digital branch. ``None`` leaves (analog slots) pass through."""
+    lr = lr * cfg.lr_scale
+    gnorm = jnp.zeros((), jnp.float32)
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+
+    def upd(fn):
+        return jax.tree.map(
+            lambda *xs: None if xs[0] is None else fn(*xs),
+            params, grads, *(opt[k] for k in sorted(opt)),
+        )
+
+    if cfg.kind == "sgd":
+        new_params = upd(lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype))
+        return new_params, opt, gnorm
+    if cfg.kind == "sgdm":
+        new_mu = upd(lambda p, g, m: cfg.momentum * m + g.astype(jnp.float32))
+        pairs = jax.tree.map(
+            lambda p, m: None if p is None else (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, new_mu)
+        return pairs, {"mu": new_mu}, gnorm
+    if cfg.kind in ("adam", "adamw"):
+        t = step.astype(jnp.float32) + 1.0
+        new_mu = jax.tree.map(
+            lambda g, m: None if g is None else cfg.beta1 * m + (1 - cfg.beta1) * g.astype(jnp.float32),
+            grads, opt["mu"])
+        new_nu = jax.tree.map(
+            lambda g, v: None if g is None else cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g.astype(jnp.float32)),
+            grads, opt["nu"])
+        bc1 = 1 - cfg.beta1 ** t
+        bc2 = 1 - cfg.beta2 ** t
+
+        def adam_step(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.kind == "adamw" and cfg.weight_decay > 0:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(
+            lambda p, m, v: None if p is None else adam_step(p, m, v),
+            params, new_mu, new_nu)
+        return new_params, {"mu": new_mu, "nu": new_nu}, gnorm
+    raise ValueError(cfg.kind)

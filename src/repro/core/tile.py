@@ -1,0 +1,185 @@
+"""Analog tile abstraction: one model weight mapped onto analog arrays.
+
+A *tile* bundles everything one analog cross-bar weight needs:
+  W   — main analog array (always present)
+  P   — auxiliary analog array (fast/residual array; TT's "A")
+  Qd  — digital SP-tracking array (RIDER eq. 12 EMA; TT-v2's hidden H lives
+        in the same slot-style bundle as ``H``)
+  Qt  — "fake" analog copy of Q (E-RIDER's periodically-synced reference)
+  H   — TT-v2 digital hidden/transfer accumulator
+  c   — chopper sign (scalar, +-1)
+  t   — step counter
+  scale — tile-to-model weight scale (model weight = scale * analog weight)
+  dev_p/dev_w — per-element device parameters of the P / W arrays
+
+Unused slots are ``None`` (a fixed structure per algorithm, so everything
+stays jit-stable). All arrays share the weight's shape, which is what makes
+the ZeRO-style (data+model)-axis sharding of tile state legal: every analog
+update is element-local.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .device import PRESETS, DeviceConfig, DeviceParams, abstract_device, sample_device
+
+ALGORITHMS = ("sgd", "ttv1", "ttv2", "agad", "residual", "rider", "erider")
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Static hyper-parameters of an analog tile (hashable, non-pytree)."""
+
+    algorithm: str = "erider"
+    device_p: DeviceConfig = PRESETS["reram_om"]
+    device_w: DeviceConfig = PRESETS["reram_om"]
+    lr_p: float = 0.5        # alpha multiplier (fast / gradient array)
+    lr_w: float = 0.05       # beta multiplier (transfer / main array)
+    gamma: float = 0.1       # residual mixing scale
+    eta: float = 0.5         # EMA stepsize (12)
+    chopper_p: float = 0.05  # chopper flip probability (17)
+    transfer_every: int = 1  # TT transfer period
+    threshold: float = 1.0   # TT-v2 transfer threshold, units of dw_min(W)
+    bl: int = 0              # pulse-train length cap (0 = uncapped)
+    pulse_mode: str = "fused"
+    target_range: float = 0.6  # fraction of tau used by the initial weights
+    min_weight_range: float = 0.1  # scale floor: assume |w| grows to >= this
+    state_dtype: Any = jnp.float32
+    # Store per-element device params (gamma, rho) as arrays (True, paper-
+    # repro fidelity) or regenerate them each step from a per-tile seed
+    # (False, LM-scale: saves 8-16 bytes/param of HBM for a memory-bound
+    # recompute — the d2d field is a physical constant, not training state).
+    store_device: bool = True
+    rng: str = "threefry"  # threefry (paper-grade) | hash (fused, LM scale)
+    # Gradient-to-pulse normalization (AIHWKit "auto granularity" analogue):
+    # 'absmean' rescales each tile's gradient by its mean |g| so the fast
+    # learning rate counts *pulses per element per step* — device-
+    # granularity-invariant. 'none' uses raw model gradients.
+    grad_norm: str = "none"
+    # Buffered (thresholded) W-transfer for residual/rider/erider: the
+    # (18b) increment accumulates in a digital buffer and is emitted as
+    # whole pulses (AIHWKit forget-buffer semantics — what the paper's
+    # experiments run). Essential on low-state devices where a continuous
+    # sub-pulse transfer stochastically fires huge dw_min pulses.
+    buffered_transfer: bool = False
+
+    def __post_init__(self):
+        assert self.algorithm in ALGORITHMS, self.algorithm
+
+
+def _needs(algorithm: str, buffered: bool = False) -> Dict[str, bool]:
+    a = algorithm
+    return dict(
+        P=a != "sgd",
+        # Qd doubles as AGAD's dynamic reference estimate (readout low-pass)
+        Qd=a in ("residual", "rider", "erider", "agad"),
+        Qt=a == "erider",
+        H=a in ("ttv2", "agad") or (buffered and a in ("residual", "rider", "erider")),
+        chopper=a in ("agad", "erider"),
+        dev_p=a != "sgd",
+    )
+
+
+class TileState(dict):
+    """dict-backed pytree; fixed key set per algorithm."""
+
+
+jax.tree_util.register_pytree_with_keys(
+    TileState,
+    lambda d: (tuple((jax.tree_util.DictKey(k), d[k]) for k in sorted(d)),
+               tuple(sorted(d))),
+    lambda keys, vals: TileState(zip(keys, vals)),
+)
+
+
+def init_tile(
+    key,
+    w0: jnp.ndarray,
+    cfg: TileConfig,
+    sp_estimate: Optional[jnp.ndarray] = None,
+) -> TileState:
+    """Create a tile for a digitally-initialized weight ``w0``.
+
+    The model weight is ``scale * analog``; ``scale`` maps w0 into
+    ``target_range * tau`` of the device dynamic range.
+    """
+    need = _needs(cfg.algorithm, cfg.buffered_transfer)
+    kp, kw, kq = jax.random.split(key, 3)
+    dt = cfg.state_dtype
+
+    tau = min(cfg.device_w.tau_min, cfg.device_w.tau_max)
+    max_abs = jnp.maximum(
+        jnp.max(jnp.abs(w0.astype(jnp.float32))), cfg.min_weight_range
+    )
+    scale = max_abs / (cfg.target_range * tau)
+
+    w = (w0.astype(jnp.float32) / scale).astype(dt)
+    shape = w0.shape
+
+    st = TileState(
+        W=w,
+        t=jnp.zeros((), jnp.int32),
+        scale=scale.astype(jnp.float32),
+        dev_w=sample_device(kw, shape, cfg.device_w) if cfg.store_device else None,
+        seed_w=None if cfg.store_device else jax.random.key_data(kw).astype(jnp.uint32),
+        P=jnp.zeros(shape, dt) if need["P"] else None,
+        Qd=None,
+        Qt=None,
+        H=jnp.zeros(shape, jnp.float32) if need["H"] else None,
+        c=jnp.ones((), jnp.float32) if need["chopper"] else None,
+        prog=jnp.zeros((), jnp.int32) if cfg.algorithm == "erider" else None,
+        dev_p=(sample_device(kp, shape, cfg.device_p)
+               if (need["dev_p"] and cfg.store_device) else None),
+        seed_p=(None if (cfg.store_device or not need["dev_p"])
+                else jax.random.key_data(kp).astype(jnp.uint32)),
+    )
+    if need["Qd"]:
+        q0 = jnp.zeros(shape, dt) if sp_estimate is None else sp_estimate.astype(dt)
+        st["Qd"] = q0
+        if need["Qt"]:
+            st["Qt"] = jnp.copy(q0)  # distinct buffer (donation safety)
+        if cfg.algorithm == "residual" and sp_estimate is not None:
+            # Two-stage semantics (Alg. 4): the ZS calibration physically
+            # drives the P device TO its (estimated) symmetric point before
+            # training starts — so P begins at the estimate, not at zero.
+            st["P"] = jnp.copy(q0)
+    return st
+
+
+def abstract_tile(shape, cfg: TileConfig) -> TileState:
+    """ShapeDtypeStruct skeleton of a tile (dry-run lowering)."""
+    need = _needs(cfg.algorithm, cfg.buffered_transfer)
+    dt = cfg.state_dtype
+
+    def arr(dtype=dt):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    seed = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    st = TileState(
+        W=arr(),
+        t=jax.ShapeDtypeStruct((), jnp.int32),
+        scale=jax.ShapeDtypeStruct((), jnp.float32),
+        dev_w=abstract_device(shape, dt) if cfg.store_device else None,
+        seed_w=None if cfg.store_device else seed,
+        P=arr() if need["P"] else None,
+        Qd=arr() if need["Qd"] else None,
+        Qt=arr() if need["Qt"] else None,
+        H=arr(jnp.float32) if need["H"] else None,
+        c=jax.ShapeDtypeStruct((), jnp.float32) if need["chopper"] else None,
+        prog=jax.ShapeDtypeStruct((), jnp.int32) if cfg.algorithm == "erider" else None,
+        dev_p=(abstract_device(shape, dt) if (need["dev_p"] and cfg.store_device) else None),
+        seed_p=(None if (cfg.store_device or not need["dev_p"]) else seed),
+    )
+    return st
+
+
+def expected_pulses(dw, dw_min: float, bl: int = 0):
+    """Expected pulse count of an update (telemetry for Fig. 4)."""
+    n = jnp.abs(dw.astype(jnp.float32)) / dw_min
+    if bl:
+        n = jnp.minimum(n, float(bl))
+    return jnp.sum(n)

@@ -1,0 +1,253 @@
+"""AnalogTrainer: wires any JAX model to the analog tile algorithms.
+
+Given a loss function over a parameter pytree and a predicate selecting
+which leaves live on analog tiles, builds pure jit-able ``init`` /
+``train_step`` functions:
+
+  1. ``begin_step`` phase per tile (chopper draw / Q-tilde sync, Alg.3 l.3-6)
+  2. forward/backward on the *effective* parameter tree
+     (analog leaves -> scale * W̄, paper's mixed weight)
+  3. digital leaves -> SGD/Adam; analog leaves -> pulse-based tile update
+
+The same train_step is used single-host and under GSPMD (the dry-run lowers
+it with sharded in/out specs; gradients reduce over the data axes before
+pulse quantization, so Assumption 3.4 applies to the global gradient).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import algorithms as alg
+from .digital_opt import DigitalOptConfig, ScheduleConfig, apply_opt, init_opt, lr_at
+from .tile import TileConfig, TileState, abstract_tile, init_tile
+
+PathPredicate = Callable[[str, Any], bool]
+LossFn = Callable[[Any, Any, jax.Array], Tuple[jax.Array, Dict[str, jax.Array]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    tile: TileConfig = TileConfig()
+    digital: DigitalOptConfig = DigitalOptConfig()
+    schedule: ScheduleConfig = ScheduleConfig()
+    # gradient accumulation: split the batch into `microbatch` slices and
+    # accumulate grads before the (single) pulse update — required to fit
+    # activations at LM scale (and keeps Assumption 3.4 applied to the
+    # full-batch gradient, as in the single-device math).
+    microbatch: int = 1
+    accum_dtype: Any = jnp.float32
+
+
+def default_analog_filter(path: str, leaf) -> bool:
+    """Analog-tile every >=2-D weight except embeddings/heads (kept digital,
+    as in the paper's setups; see DESIGN.md §5)."""
+    if getattr(leaf, "ndim", 0) < 2:
+        return False
+    lowered = path.lower()
+    return not any(s in lowered for s in ("embed", "vocab", "lm_head", "pos"))
+
+
+def path_str(kp) -> str:
+    return jax.tree_util.keystr(kp, simple=True, separator="/")
+
+
+def partition_params(params, analog_filter: PathPredicate):
+    """Split a param tree into (digital tree w/ None at analog slots,
+    {path: leaf} analog dict)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    analog = {}
+    dig_leaves = []
+    for kp, leaf in flat:
+        p = path_str(kp)
+        if analog_filter(p, leaf):
+            analog[p] = leaf
+            dig_leaves.append(None)
+        else:
+            dig_leaves.append(leaf)
+    digital = jax.tree_util.tree_unflatten(treedef, dig_leaves)
+    return digital, analog
+
+
+def merge_effective(digital, tiles: Dict[str, TileState], tcfg: TileConfig):
+    """Rebuild the full parameter tree with analog leaves replaced by
+    their effective (model-space) weights."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        digital, is_leaf=lambda x: x is None
+    )
+    out = []
+    for kp, leaf in flat:
+        p = path_str(kp)
+        if leaf is None and p in tiles:
+            out.append(alg.effective_weight(tiles[p], tcfg))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def extract_analog_grads(grads, tiles: Dict[str, TileState]):
+    flat, _ = jax.tree_util.tree_flatten_with_path(grads)
+    agrads = {}
+    for kp, leaf in flat:
+        p = path_str(kp)
+        if p in tiles:
+            agrads[p] = leaf
+    return agrads
+
+
+def mask_digital_grads(grads, tiles: Dict[str, TileState]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    out = []
+    for kp, leaf in flat:
+        out.append(None if path_str(kp) in tiles else leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class TrainState(dict):
+    """Pytree: step, key, params (digital; None at analog), tiles, opt."""
+
+
+jax.tree_util.register_pytree_with_keys(
+    TrainState,
+    lambda d: (tuple((jax.tree_util.DictKey(k), d[k]) for k in sorted(d)),
+               tuple(sorted(d))),
+    lambda keys, vals: TrainState(zip(keys, vals)),
+)
+
+
+class AnalogTrainer:
+    def __init__(
+        self,
+        loss_fn: LossFn,
+        cfg: TrainerConfig,
+        analog_filter: PathPredicate = default_analog_filter,
+    ):
+        self.loss_fn = loss_fn
+        self.cfg = cfg
+        self.analog_filter = analog_filter
+
+    # -- state ------------------------------------------------------------
+    def init(self, key, params, sp_estimates: Optional[Dict[str, Any]] = None) -> TrainState:
+        digital, analog = partition_params(params, self.analog_filter)
+        tiles = {}
+        for i, (p, w0) in enumerate(sorted(analog.items())):
+            sp = (sp_estimates or {}).get(p)
+            tiles[p] = init_tile(jax.random.fold_in(key, i), w0, self.cfg.tile, sp)
+        return TrainState(
+            step=jnp.zeros((), jnp.int32),
+            key=jax.random.key_data(key).astype(jnp.uint32),
+            params=digital,
+            tiles=tiles,
+            opt=init_opt(digital, self.cfg.digital),
+        )
+
+    def abstract_state(self, params_shapes) -> TrainState:
+        """ShapeDtypeStruct state (dry-run lowering; no allocation)."""
+        digital, analog = partition_params(params_shapes, self.analog_filter)
+        tiles = {p: abstract_tile(w.shape, self.cfg.tile) for p, w in sorted(analog.items())}
+        opt = init_opt(
+            jax.tree.map(lambda s: None if s is None else jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                         digital, is_leaf=lambda x: x is None),
+            self.cfg.digital,
+        )
+        return TrainState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            key=jax.ShapeDtypeStruct((2,), jnp.uint32),
+            params=digital,
+            tiles=tiles,
+            opt=opt,
+        )
+
+    # -- step -------------------------------------------------------------
+    def train_step(self, state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        tcfg = self.cfg.tile
+        key = jax.random.wrap_key_data(state["key"])
+        key, k_begin, k_model, k_upd = jax.random.split(key, 4)
+
+        # phase 1: chopper / Q-tilde sync
+        tiles = {
+            p: alg.begin_step(ts, jax.random.fold_in(k_begin, i), tcfg)
+            for i, (p, ts) in enumerate(sorted(state["tiles"].items()))
+        }
+
+        # phase 2: fwd/bwd on effective weights (with grad accumulation)
+        eff = merge_effective(state["params"], tiles, tcfg)
+        mb = self.cfg.microbatch
+        if mb <= 1:
+            (loss, aux), grads = jax.value_and_grad(self.loss_fn, has_aux=True)(
+                eff, batch, k_model
+            )
+        else:
+            def slice_batch(i):
+                return jax.tree.map(
+                    lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:])[i]
+                    if getattr(x, "ndim", 0) >= 1 else x,
+                    batch,
+                )
+
+            def mb_step(carry, i):
+                g_acc, l_acc, a_acc = carry
+                (l, a), g = jax.value_and_grad(self.loss_fn, has_aux=True)(
+                    eff, slice_batch(i), jax.random.fold_in(k_model, i)
+                )
+                g_acc = jax.tree.map(
+                    lambda acc, gi: acc + gi.astype(self.cfg.accum_dtype), g_acc, g
+                )
+                a_acc = jax.tree.map(lambda x, y: x + y, a_acc, a)
+                return (g_acc, l_acc + l, a_acc), None
+
+            # first microbatch outside the scan (defines aux structure)
+            (l0, a0), g0_ = jax.value_and_grad(self.loss_fn, has_aux=True)(
+                eff, slice_batch(0), jax.random.fold_in(k_model, 0)
+            )
+            g0 = jax.tree.map(lambda g: g.astype(self.cfg.accum_dtype), g0_)
+            (grads, loss, aux), _ = jax.lax.scan(
+                mb_step, (g0, l0.astype(jnp.float32), a0), jnp.arange(1, mb)
+            )
+            inv = 1.0 / mb
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss * inv
+            aux = jax.tree.map(lambda x: x * inv, aux)
+
+        lr = lr_at(state["step"], self.cfg.schedule)
+
+        # phase 3a: digital branch
+        dgrads = mask_digital_grads(grads, tiles)
+        new_params, new_opt, gnorm = apply_opt(
+            state["params"], dgrads, state["opt"], state["step"], lr, self.cfg.digital
+        )
+
+        # phase 3b: analog branch (pulse updates)
+        agrads = extract_analog_grads(grads, tiles)
+        tile_metrics = []
+        new_tiles = {}
+        for i, (p, ts) in enumerate(sorted(tiles.items())):
+            ts2, m = alg.update(ts, agrads[p], jax.random.fold_in(k_upd, i), tcfg, lr)
+            new_tiles[p] = ts2
+            tile_metrics.append(m)
+
+        metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm, **aux}
+        if tile_metrics:
+            keys = tile_metrics[0].keys()
+            for k in keys:
+                vals = jnp.stack([m[k] for m in tile_metrics if k in m])
+                metrics[f"tile/{k}"] = jnp.sum(vals) if k in ("pulses", "prog_events") else jnp.mean(vals)
+
+        new_state = TrainState(
+            step=state["step"] + 1,
+            key=jax.random.key_data(key).astype(jnp.uint32),
+            params=new_params,
+            tiles=new_tiles,
+            opt=new_opt,
+        )
+        return new_state, metrics
+
+    def jit_step(self, donate: bool = True, **jit_kwargs):
+        return jax.jit(
+            self.train_step,
+            donate_argnums=(0,) if donate else (),
+            **jit_kwargs,
+        )

@@ -1,0 +1,82 @@
+"""Zero-shifting SP estimation (paper Algorithm 1) — stochastic and cyclic.
+
+This is the *static* calibration baseline whose pulse complexity the paper
+bounds (Thm 2.2: avg ||G||^2 <= O(1/(N dw_min)) + Theta(dw_min); Thm C.2:
+last-iterate N <= log(.)/(2 mu_q dw_min) for monotone devices). The
+benchmark ``benchmarks/fig1_zs.py`` sweeps N and dw_min against these rates.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .device import DeviceConfig, DeviceParams, fg, symmetric_point
+from .pulse import zs_step
+
+
+def zs_estimate(
+    key,
+    w0,
+    dp: DeviceParams,
+    cfg: DeviceConfig,
+    n_pulses: int,
+    *,
+    scheme: str = "stochastic",
+) -> jnp.ndarray:
+    """Run Algorithm 1 for ``n_pulses`` pulses, return W_N (the SP estimate).
+
+    scheme: 'stochastic' draws eps ~ U{-dw_min, +dw_min} i.i.d. per element;
+            'cyclic' alternates +dw_min, -dw_min (paper eq. 31).
+    """
+
+    def body(carry, n):
+        w, k = carry
+        k, ke, kc = jax.random.split(k, 3)
+        if scheme == "stochastic":
+            sign = jnp.where(
+                jax.random.bernoulli(ke, 0.5, w.shape), 1.0, -1.0
+            )
+        elif scheme == "cyclic":
+            sign = jnp.where(n % 2 == 0, 1.0, -1.0) * jnp.ones_like(w)
+        else:
+            raise ValueError(scheme)
+        eps = sign * cfg.dw_min
+        w = zs_step(w, eps, dp, cfg, kc)
+        return (w, k), None
+
+    (w, _), _ = jax.lax.scan(body, (w0, key), jnp.arange(n_pulses))
+    return w
+
+
+def zs_estimate_with_trace(
+    key, w0, dp, cfg, n_pulses: int, *, scheme: str = "stochastic", every: int = 1
+) -> Tuple[jnp.ndarray, dict]:
+    """As zs_estimate but also returns traces of ||G(W_n)||^2 and SP error."""
+    w_sp = symmetric_point(dp, cfg)
+
+    def body(carry, n):
+        w, k = carry
+        k, ke, kc = jax.random.split(k, 3)
+        if scheme == "stochastic":
+            sign = jnp.where(jax.random.bernoulli(ke, 0.5, w.shape), 1.0, -1.0)
+        else:
+            sign = jnp.where(n % 2 == 0, 1.0, -1.0) * jnp.ones_like(w)
+        w = zs_step(w, sign * cfg.dw_min, dp, cfg, kc)
+        _, g = fg(w, dp, cfg)
+        rec = (jnp.mean(g * g), jnp.mean((w - w_sp) ** 2))
+        return (w, k), rec
+
+    (w, _), (g_sq, err_sq) = jax.lax.scan(body, (w0, key), jnp.arange(n_pulses))
+    return w, {"g_sq": g_sq, "sp_err_sq": err_sq}
+
+
+def pulses_to_target(g_sq_trace, target: float) -> int:
+    """Smallest N with running-average ||G||^2 <= target (-1 if never)."""
+    import numpy as np
+
+    g = np.asarray(g_sq_trace)
+    avg = np.cumsum(g) / (np.arange(len(g)) + 1)
+    hits = np.nonzero(avg <= target)[0]
+    return int(hits[0]) + 1 if len(hits) else -1

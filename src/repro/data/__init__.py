@@ -1,0 +1,2 @@
+from .pipeline import Prefetcher  # noqa: F401
+from .synthetic import BigramLM, ImageDataset, procedural_images  # noqa: F401

@@ -1,0 +1,57 @@
+"""Host data pipeline: background prefetch + device placement with shardings.
+
+Single-process here, but the layout matches a multi-host deployment: each
+host materializes only its addressable shard of the global batch (the
+``BigramLM`` stream is deterministic in (seed, step), so host h slices rows
+[h*B/H, (h+1)*B/H) of the same global batch — no data service needed).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class Prefetcher:
+    """Wraps a batch-producing callable with a depth-N background queue."""
+
+    def __init__(self, producer: Callable[[int], Dict[str, np.ndarray]],
+                 start_step: int = 0, depth: int = 2,
+                 shardings: Optional[Dict] = None):
+        self.producer = producer
+        self.shardings = shardings
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self.shardings is None:
+            return batch
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), batch, self.shardings
+        )
+
+    def _run(self):
+        while not self._stop.is_set():
+            batch = self.producer(self._step)
+            self._step += 1
+            while not self._stop.is_set():
+                try:
+                    self._q.put(batch, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._place(self._q.get())
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,2 @@
+"""Distribution substrate: sharding rules, grad compression, fault handling."""
+from . import compression, fault, sharding  # noqa: F401

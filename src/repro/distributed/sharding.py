@@ -1,0 +1,219 @@
+"""Sharding rules: parameter-path patterns -> PartitionSpecs.
+
+MaxText-style logical rules keyed on the stable parameter names produced by
+the model zoo. Highlights:
+
+* model axis ("model"): attention heads / MLA up-projections / FFN hidden /
+  expert ffn dim / RG-LRU blocks / SSD heads / vocab.
+* data axes ("pod","data"): batch; ZeRO-style sharding of analog tile state
+  and digital optimizer moments (legal because analog updates are
+  element-local — DESIGN.md §3).
+* scan-stacked body params (path contains "/body/") get a leading None for
+  the period axis.
+* decode caches: batch dim on data axes when divisible, otherwise the
+  sequence dim (long_500k batch=1 -> ring/sequence sharding).
+
+All choices are divisibility-checked against the actual leaf shapes; a dim
+that doesn't divide falls back to replication (GSPMD would pad, but uneven
+pads on 512 ways waste memory).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axis_sizes(mesh: Mesh):
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh.shape[a]
+    msize = mesh.shape[model_ax] if model_ax else 1
+    return data_axes, dsize, model_ax, msize
+
+
+# (regex, spec template) — templates use "M" for model, "D" for data axes,
+# None for replicated; matched against the *trailing* dims of the leaf.
+PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    (r"embed$", ("M", None)),
+    (r"head$", (None, "M")),
+    (r"(wq|wk|wv|wuq|wuk|wuv)$", (None, "M")),
+    (r"(bq|bk|bv)$", ("M",)),
+    (r"attn/wo$", ("M", None)),
+    (r"cross/wo$", ("M", None)),
+    (r"(wdq|wdkv|wkr)$", (None, None)),
+    (r"(qln|kvln|qn|kn|ln1|ln2|lnx|ln_f|norm)$", (None,)),
+    (r"mlp/(wi|wg)$", (None, "M")),
+    (r"mlp/wo$", ("M", None)),
+    (r"moe/router$", (None, None)),
+    (r"moe/(wi|wg)$", (None, None, "M")),
+    (r"moe/wo$", (None, "M", None)),
+    (r"moe/(swi|swg)$", (None, "M")),
+    (r"moe/swo$", ("M", None)),
+    (r"mix/(wx|wy|wz|wb|wc|wdt)$", (None, "M")),
+    (r"mix/(war|wai)$", ("M", None, None)),
+    (r"mix/lam$", ("M",)),
+    (r"mix/(conv|conv_x|conv_b|conv_c)$", (None, "M")),
+    (r"mix/(a_log|dt_bias|d_skip)$", ("M",)),
+    (r"mix/wout$", ("M", None)),
+    (r"wout$", ("M", None)),
+    (r"(conv1|conv2)/w$", (None, None, None, None)),
+    (r"/b$", (None,)),
+    (r"/w$", (None, "M")),  # convnet fc fallback
+)
+
+
+def _resolve(template, shape, data_axes, dsize, model_ax, msize, zero_dim: Optional[int]):
+    """Template -> PartitionSpec with divisibility checks. ``zero_dim`` marks
+    the first replicated dim to ZeRO-shard over the data axes (or None)."""
+    offset = len(shape) - len(template)
+    spec: list = [None] * len(shape)
+    for i, t in enumerate(template):
+        dim = offset + i
+        if t == "M" and model_ax and msize > 1 and shape[dim] % msize == 0 \
+                and shape[dim] > 0:
+            spec[dim] = model_ax
+    if zero_dim is not None and data_axes and dsize > 1:
+        for dim in range(len(shape)):
+            if spec[dim] is None and shape[dim] % dsize == 0 and shape[dim] >= dsize:
+                spec[dim] = data_axes if len(data_axes) > 1 else data_axes[0]
+                break
+    return P(*spec)
+
+
+def param_spec(path: str, shape, mesh: Mesh, zero: bool = False) -> P:
+    data_axes, dsize, model_ax, msize = mesh_axis_sizes(mesh)
+    template = None
+    for pat, tmpl in PARAM_RULES:
+        if re.search(pat, path):
+            template = tmpl
+            break
+    if template is None:
+        template = (None,) * len(shape)
+    if "/body/" in path and len(shape) > len(template):
+        template = (None,) + tuple(template)
+    while len(template) < len(shape):
+        template = (None,) + tuple(template)
+    template = tuple(template[-len(shape):]) if len(shape) else ()
+    return _resolve(template, shape, data_axes, dsize, model_ax, msize,
+                    0 if zero else None)
+
+
+def state_shardings(state_tree, mesh: Mesh, zero_states: bool = True):
+    """NamedShardings for an AnalogTrainer TrainState (abstract or concrete).
+
+    Tile/optimizer arrays inherit the owning weight's spec plus ZeRO over the
+    data axes; scalars replicate.
+    """
+
+    def spec_of(kp, leaf):
+        path = jax.tree_util.keystr(kp, simple=True, separator="/")
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        # tile state arrays live under tiles/<weight-path>/<slot>
+        m = re.match(r"tiles/(.*)/(W|P|Qd|Qt|H|dev_p/(gamma|rho)|dev_w/(gamma|rho))$", path)
+        if m:
+            return param_spec(m.group(1), shape, mesh, zero=zero_states)
+        if path.startswith("opt/"):
+            sub = re.sub(r"^opt/(mu|nu)/", "", path)
+            return param_spec(sub, shape, mesh, zero=zero_states)
+        if path.startswith("params/"):
+            return param_spec(path[len("params/"):], shape, mesh)
+        return param_spec(path, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(mesh, spec_of(kp, leaf)), state_tree
+    )
+
+
+def params_shardings(params_tree, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(
+            mesh,
+            param_spec(jax.tree_util.keystr(kp, simple=True, separator="/"),
+                       leaf.shape, mesh),
+        ),
+        params_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    data_axes, dsize, model_ax, msize = mesh_axis_sizes(mesh)
+    daxes = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+
+    def spec_of(kp, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        spec: list = [None] * len(shape)
+        if shape[0] % dsize == 0 and dsize > 1:
+            spec[0] = daxes
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(mesh, spec_of(kp, leaf)), batch_tree
+    )
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """Decode-cache shardings: batch on data axes when divisible, else the
+    sequence dim (long-context batch=1); model axis on heads/head_dim/state
+    dims when divisible."""
+    data_axes, dsize, model_ax, msize = mesh_axis_sizes(mesh)
+    daxes = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+
+    def spec_of(kp, leaf):
+        path = jax.tree_util.keystr(kp, simple=True, separator="/")
+        shape = leaf.shape
+        name = path.split("/")[-1]
+        spec: list = [None] * len(shape)
+        if len(shape) == 0 or name == "pos":
+            return P(*spec)
+        # leading scan (period) axis for body caches
+        bdim = 1 if "/body/" in path else 0
+        if len(shape) <= bdim:
+            return P(*spec)
+        batch_ok = dsize > 1 and shape[bdim] % dsize == 0 and shape[bdim] >= dsize
+        if batch_ok:
+            spec[bdim] = daxes
+        elif name in ("k", "v", "ckv", "kpe", "ck", "cv") and len(shape) > bdim + 1 \
+                and dsize > 1 and shape[bdim + 1] % dsize == 0:
+            spec[bdim + 1] = daxes  # shard cache sequence (long_500k)
+        # model axis: try trailing dims (heads / head_dim / state dims)
+        if model_ax:
+            for dim in range(len(shape) - 1, bdim, -1):
+                if spec[dim] is None and shape[dim] % msize == 0 and shape[dim] >= msize:
+                    spec[dim] = model_ax
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(mesh, spec_of(kp, leaf)), cache_tree
+    )
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def logical_rules(mesh: Mesh):
+    """Table consumed by models.common.constrain()."""
+    data_axes, dsize, model_ax, msize = mesh_axis_sizes(mesh)
+    daxes = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    return mesh, {
+        "batch": daxes,
+        "embed": None,
+        "heads": model_ax,
+        "mlp": model_ax,
+        "vocab": model_ax,
+    }

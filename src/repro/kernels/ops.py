@@ -1,0 +1,211 @@
+"""jit-ready wrappers around the Pallas kernels with pure-jnp fallbacks.
+
+Dispatch policy: on TPU backends the fused Pallas kernels run compiled; on
+CPU (this container) the default is the jnp reference path (the Pallas
+interpreter executes block-by-block in Python and is only meant for
+correctness tests). Both paths consume *identical* random bits so they are
+bit-comparable: tests assert allclose between backends for the same key.
+
+All wrappers accept arbitrary-rank inputs; internally tensors are viewed as
+2-D and zero-padded to kernel block multiples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .analog_matmul import DEFAULT_BLOCKS as MVM_BLOCKS
+from .analog_matmul import analog_mvm_pallas
+from .analog_update import DEFAULT_BLOCK as UPD_BLOCK
+from .analog_update import analog_update_pallas
+from .sp_filter import sp_filter_pallas
+
+_BACKEND: Optional[str] = None  # None = auto
+
+
+def set_backend(name: Optional[str]) -> None:
+    """Force kernel backend: 'ref', 'pallas', or None for auto."""
+    global _BACKEND
+    assert name in (None, "ref", "pallas")
+    _BACKEND = name
+
+
+def backend() -> str:
+    if _BACKEND is not None:
+        return _BACKEND
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad2d(x, bm, bn, fill=0.0):
+    m, n = x.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)), constant_values=fill)
+    return x
+
+
+def _view2d(x):
+    """View an arbitrary-rank array as 2-D (leading dims flattened)."""
+    if x.ndim == 0:
+        return x.reshape(1, 1)
+    if x.ndim == 1:
+        return x.reshape(1, -1)
+    if x.ndim == 2:
+        return x
+    return x.reshape(-1, x.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# analog pulse update
+# ---------------------------------------------------------------------------
+
+
+def analog_update(
+    w,
+    dw,
+    gamma,
+    rho,
+    key,
+    *,
+    dw_min: float,
+    tau_min: float,
+    tau_max: float,
+    sigma_c2c: float,
+    bl: int = 0,
+    interpret: bool = True,
+    rng: str = "threefry",
+):
+    """Fused analog pulse update; see kernels/ref.analog_update_ref.
+
+    rng='threefry' uses jax.random (paper-grade, bit-stable); rng='hash'
+    uses the fused stateless hash (kernels/fastrng.py) — required at LM
+    scale where threefry's while-loop blocks GSPMD sharding propagation.
+    """
+    kwargs = dict(
+        dw_min=dw_min, tau_min=tau_min, tau_max=tau_max, sigma_c2c=sigma_c2c, bl=bl
+    )
+
+    def make_noise(shape):
+        if rng == "hash":
+            from . import fastrng
+
+            seed = fastrng.seed_from_key(key)
+            return (fastrng.hash_bits(seed, shape, 1),
+                    fastrng.hash_normal(seed, shape, 2))
+        ku, kz = jax.random.split(key)
+        return (jax.random.bits(ku, shape, dtype=jnp.uint32),
+                jax.random.normal(kz, shape, dtype=jnp.float32))
+
+    if backend() != "pallas":
+        # Pure-jnp path operates on the ORIGINAL shapes: everything is
+        # element-wise, and any reshape/pad of a (scan, zero, model)-sharded
+        # tile array would force GSPMD to rematerialize it replicated.
+        ubits, zeta = make_noise(w.shape)
+        return ref.analog_update_ref(w, dw, gamma, rho, ubits, zeta, **kwargs)
+
+    shape = w.shape
+    w2 = _view2d(w)
+    m, n = w2.shape
+    bm = min(UPD_BLOCK[0], m)
+    bn = min(UPD_BLOCK[1], n)
+    w2 = _pad2d(w2, bm, bn)
+    dw2 = _pad2d(_view2d(dw), bm, bn)
+    g2 = _pad2d(_view2d(gamma), bm, bn, fill=1.0)
+    r2 = _pad2d(_view2d(rho), bm, bn)
+    ubits, zeta = make_noise(w2.shape)
+    out = analog_update_pallas(
+        w2, dw2, g2, r2, ubits, zeta, interpret=interpret, **kwargs
+    )
+    return out[:m, :n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# analog MVM
+# ---------------------------------------------------------------------------
+
+
+def analog_mvm(
+    x,
+    w,
+    key,
+    *,
+    inp_res: float,
+    inp_bound: float,
+    out_res: float,
+    out_bound: float,
+    out_noise: float,
+    interpret: bool = True,
+):
+    """IO-quantized crossbar forward: x (..., K) @ w (K, N)."""
+    batch_shape = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    kwargs = dict(
+        inp_res=inp_res,
+        inp_bound=inp_bound,
+        out_res=out_res,
+        out_bound=out_bound,
+        out_noise=out_noise,
+    )
+    if backend() == "pallas":
+        bm = min(MVM_BLOCKS[0], m)
+        bn = min(MVM_BLOCKS[1], n)
+        bk = min(MVM_BLOCKS[2], k)
+        s = jnp.maximum(jnp.max(jnp.abs(x2.astype(jnp.float32)), axis=-1, keepdims=True), 1e-12)
+        xp = _pad2d(x2, bm, bk)
+        wp = _pad2d(w, bk, bn)
+        sp = _pad2d(s, bm, 1, fill=1.0)
+        noise = jax.random.normal(key, (xp.shape[0], wp.shape[1]), dtype=jnp.float32)
+        out = analog_mvm_pallas(xp, wp, sp, noise, interpret=interpret, **kwargs)
+        out = out[:m, :n].astype(x.dtype)
+    else:
+        noise = jax.random.normal(key, (m, n), dtype=jnp.float32)
+        out = ref.analog_mvm_ref(x2, w, noise, **kwargs)
+    return out.reshape(*batch_shape, n)
+
+
+# ---------------------------------------------------------------------------
+# SP filter
+# ---------------------------------------------------------------------------
+
+
+def sp_filter(
+    q,
+    p,
+    gamma,
+    rho,
+    *,
+    eta: float,
+    tau_min: float,
+    tau_max: float,
+    interpret: bool = True,
+):
+    """EMA tracking update (12) + telemetry. Returns (q_new, gp_sq, err_sq)."""
+    shape = q.shape
+    q2 = _view2d(q)
+    m, n = q2.shape
+    bm = min(256, m)
+    bn = min(512, n)
+    q2 = _pad2d(q2, bm, bn)
+    p2 = _pad2d(_view2d(p), bm, bn)
+    g2 = _pad2d(_view2d(gamma), bm, bn, fill=1.0)
+    r2 = _pad2d(_view2d(rho), bm, bn)
+    if backend() == "pallas":
+        q_new, gp, err = sp_filter_pallas(
+            q2, p2, g2, r2, eta=eta, tau_min=tau_min, tau_max=tau_max,
+            interpret=interpret,
+        )
+        # padded gamma=1, rho=0 regions contribute 0 to gp but (q-w_sp)^2 = 0
+        # there as well since q=p=0 and w_sp=0.
+    else:
+        q_new, gp, err = ref.sp_filter_ref(
+            q2, p2, g2, r2, eta=eta, tau_min=tau_min, tau_max=tau_max
+        )
+    return q_new[: m, : n].reshape(shape), gp, err

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init). 512 placeholder CPU devices back the production
+meshes: (16,16)=(data,model) single-pod and (2,16,16)=(pod,data,model)
+multi-pod. Everything is ShapeDtypeStruct-driven — no array is ever
+allocated; ``compiled.memory_analysis()`` proves the cell fits HBM and
+``cost_analysis()`` + the optimized HLO feed the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k [--multi-pod] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, ARCHS, get_config, input_specs, shape_applicable  # noqa: E402
+from repro.core.device import DeviceConfig  # noqa: E402
+from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig  # noqa: E402
+from repro.core.tile import TileConfig  # noqa: E402
+from repro.core.trainer import AnalogTrainer, TrainerConfig, default_analog_filter  # noqa: E402
+from repro.distributed import sharding  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.common import set_shard_rules  # noqa: E402
+from repro.models.lm import LM  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+
+# LM-scale analog tile config: bf16 state, regenerated device params
+# (store_device=False), E-RIDER by default (the paper's headline method).
+LM_DEVICE = DeviceConfig(kind="softbounds", dw_min=1e-4, sigma_d2d=0.1,
+                         sigma_pm=0.3, sigma_c2c=0.05)
+LM_DEVICE_P = DeviceConfig(kind="softbounds", dw_min=1e-4, sigma_d2d=0.1,
+                           sigma_pm=0.3, sigma_c2c=0.05,
+                           ref_mean=0.1, ref_std=0.1)
+
+# per-arch microbatch count for train_4k (global batch 256)
+MICROBATCH = {
+    "deepseek-v2-236b": 16,
+    "mixtral-8x7b": 16,
+    "recurrentgemma-9b": 16,
+    "qwen3-14b": 16,
+    "gemma3-4b": 8,
+    "minicpm3-4b": 8,
+    "mamba2-2.7b": 8,
+    "qwen2-0.5b": 4,
+    "qwen2-vl-2b": 4,
+    "seamless-m4t-large-v2": 4,
+}
+
+
+def make_tile_cfg(algorithm: str = "erider") -> TileConfig:
+    return TileConfig(
+        algorithm=algorithm,
+        device_p=LM_DEVICE_P,
+        device_w=LM_DEVICE,
+        state_dtype=jnp.bfloat16,
+        store_device=False,
+        rng="hash",
+        lr_p=0.5, lr_w=0.05, gamma=0.1, eta=0.5, chopper_p=0.05,
+    )
+
+
+def make_trainer(model: LM, arch: str, algorithm: str, dsize: int) -> AnalogTrainer:
+    mb = MICROBATCH.get(arch, 2)
+    mb = max(1, min(mb, 256 // dsize))
+    tcfg = TrainerConfig(
+        tile=make_tile_cfg(algorithm),
+        digital=DigitalOptConfig(kind="sgdm", clip_norm=0.0),
+        schedule=ScheduleConfig(kind="cosine", base_lr=0.1, total_steps=10000),
+        microbatch=mb,
+        accum_dtype=jnp.bfloat16,
+    )
+    return AnalogTrainer(model.loss, tcfg, default_analog_filter)
+
+
+# perf-iteration options (see EXPERIMENTS.md §Perf):
+#   zero_tiles: bool — ZeRO-shard tile state over the data axes (per-
+#       microbatch weight all-gathers; disable when state fits model-sharded)
+#   moe_impl: einsum | ragged — dispatch implementation
+#   remat: bool — activation checkpointing of the layer-period scan
+#   attn_chunk / microbatch / moe_group: overrides
+DEFAULT_OPTS = dict(zero_tiles=True, moe_impl=None, remat=None,
+                    attn_chunk=None, microbatch=None, moe_group=None,
+                    mla_absorbed=None)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, algorithm: str = "erider",
+               opts=None):
+    """Returns (lower_fn, model_flops) for one cell; lower_fn() -> Lowered."""
+    import dataclasses as _dc
+
+    o = dict(DEFAULT_OPTS, **(opts or {}))
+    cfg = get_config(arch)
+    over = {}
+    if o["moe_impl"] is not None:
+        over["moe_impl"] = o["moe_impl"]
+    if o["remat"] is not None:
+        over["remat"] = o["remat"]
+    if o["attn_chunk"] is not None:
+        over["attn_chunk"] = o["attn_chunk"]
+    if o["moe_group"] is not None:
+        over["moe_group"] = o["moe_group"]
+    if o["mla_absorbed"] is not None:
+        over["mla_absorbed"] = o["mla_absorbed"]
+    if over:
+        cfg = _dc.replace(cfg, **over)
+    spec = SHAPES[shape_name]
+    model = LM(cfg)
+    aparams = model.abstract_params()
+    _, dsize, _, _ = sharding.mesh_axis_sizes(mesh)
+    batch_specs = input_specs(cfg, shape_name)
+    mflops = analysis.model_flops_for(cfg, spec)
+
+    if spec.kind == "train":
+        trainer = make_trainer(model, arch, algorithm, dsize)
+        if o["microbatch"] is not None:
+            trainer.cfg = _dc.replace(trainer.cfg, microbatch=o["microbatch"])
+        astate = trainer.abstract_state(aparams)
+        in_sh = (sharding.state_shardings(astate, mesh,
+                                          zero_states=o["zero_tiles"]),
+                 sharding.batch_shardings(batch_specs, mesh))
+
+        def lower():
+            fn = jax.jit(trainer.train_step, in_shardings=in_sh,
+                         donate_argnums=(0,))
+            return fn.lower(astate, batch_specs)
+
+        return lower, mflops
+
+    p_sh = sharding.params_shardings(aparams, mesh)
+
+    if spec.kind == "prefill":
+        enc_len = spec.seq_len if cfg.is_encdec else 0
+        acache = model.init_cache(spec.global_batch, spec.seq_len,
+                                  enc_len=enc_len, abstract=True)
+        c_sh = sharding.cache_shardings(acache, mesh)
+        in_sh = (p_sh, sharding.batch_shardings(batch_specs, mesh), c_sh)
+
+        def lower():
+            fn = jax.jit(model.prefill, in_shardings=in_sh, donate_argnums=(2,))
+            return fn.lower(aparams, batch_specs, acache)
+
+        return lower, mflops
+
+    # decode: serve_step(params, token, cache, pos)
+    enc_len = min(spec.seq_len, 32768) if cfg.is_encdec else 0
+    acache = model.init_cache(spec.global_batch, spec.seq_len,
+                              enc_len=enc_len, abstract=True)
+    c_sh = sharding.cache_shardings(acache, mesh)
+    tok = batch_specs["tokens"]
+    pos = batch_specs["pos"]
+    in_sh = (p_sh, sharding.batch_shardings({"t": tok}, mesh)["t"], c_sh, None)
+
+    def lower():
+        fn = jax.jit(model.serve_step, in_shardings=in_sh, donate_argnums=(2,))
+        return fn.lower(aparams, tok, acache, pos)
+
+    return lower, mflops
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             algorithm: str = "erider", tag: str = "", opts=None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, cell_id + ".json")
+
+    cfg = get_config(arch)
+    ok, reason = shape_applicable(cfg, shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+              "opts": {k: v for k, v in (opts or {}).items() if v is not None}}
+    if not ok:
+        result.update(status="skipped", reason=reason)
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[dryrun] {cell_id}: SKIPPED ({reason})", flush=True)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_shard_rules(sharding.logical_rules(mesh))
+    chips = mesh.size
+    try:
+        t0 = time.time()
+        lower_fn, mflops = build_cell(arch, shape_name, mesh,
+                                      algorithm=algorithm, opts=opts)
+        with mesh:
+            lowered = lower_fn()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        roof = analysis.analyze(
+            arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+            cost=cost, hlo_text=hlo, model_flops=mflops, memstats=mem)
+        result.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=dict(
+                argument_bytes=mem.argument_size_in_bytes,
+                output_bytes=mem.output_size_in_bytes,
+                temp_bytes=mem.temp_size_in_bytes,
+                alias_bytes=mem.alias_size_in_bytes,
+                peak_per_device_gb=round(
+                    (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3),
+            ),
+            roofline=roof.to_json(),
+        )
+        print(f"[dryrun] {cell_id}: OK compile={t_compile:.0f}s "
+              f"mem/dev={result['memory']['peak_per_device_gb']}GB "
+              f"bottleneck={roof.bottleneck} frac={roof.roofline_fraction:.3f}",
+              flush=True)
+    except Exception as e:  # noqa: BLE001 — report and continue the sweep
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {cell_id}: ERROR {type(e).__name__}: {str(e)[:200]}",
+              flush=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="full 40-cell sweep")
+    ap.add_argument("--algorithm", default="erider")
+    ap.add_argument("--tag", default="", help="suffix for perf-iteration runs")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-zero-tiles", action="store_true")
+    ap.add_argument("--moe-impl", default=None, choices=[None, "einsum", "ragged"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--moe-group", type=int, default=None)
+    ap.add_argument("--mla-absorbed", action="store_true")
+    args = ap.parse_args(argv)
+    opts = dict(zero_tiles=not args.no_zero_tiles, moe_impl=args.moe_impl,
+                remat=False if args.no_remat else None,
+                attn_chunk=args.attn_chunk, microbatch=args.microbatch,
+                moe_group=args.moe_group,
+                mla_absorbed=True if args.mla_absorbed else None)
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else sorted(SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                cell = f"{arch}__{shape}__{mesh_name}" + (f"__{args.tag}" if args.tag else "")
+                path = os.path.join(args.out, cell + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[dryrun] {cell}: cached", flush=True)
+                            continue
+                run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                         algorithm=args.algorithm, tag=args.tag, opts=opts)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Training driver CLI: analog LM training with checkpoint/restart, fault
+tolerance and the full data pipeline.
+
+On this CPU container it runs reduced configs end-to-end (see
+examples/lm_analog_training.py); on a real fleet the same driver runs the
+full configs — the mesh factory, sharding rules and train_step are exactly
+the ones the multi-pod dry-run lowers.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --steps 100 --algorithm erider --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core.device import DeviceConfig
+from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
+from repro.core.tile import TileConfig
+from repro.core.trainer import AnalogTrainer, TrainerConfig, default_analog_filter
+from repro.checkpoint import ckpt
+from repro.data import BigramLM, Prefetcher
+from repro.distributed import sharding
+from repro.distributed.fault import PreemptionHandler, StragglerMonitor
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import set_shard_rules
+from repro.models.lm import LM
+
+
+def make_tile_cfg(algorithm: str, smoke: bool) -> TileConfig:
+    dev = DeviceConfig(kind="softbounds", dw_min=2e-4 if smoke else 1e-4,
+                       sigma_d2d=0.1, sigma_pm=0.3, sigma_c2c=0.05)
+    dev_p = DeviceConfig(kind="softbounds", dw_min=2e-4 if smoke else 1e-4,
+                         sigma_d2d=0.1, sigma_pm=0.3, sigma_c2c=0.05,
+                         ref_mean=0.1, ref_std=0.1)
+    return TileConfig(
+        algorithm=algorithm, device_p=dev_p, device_w=dev,
+        state_dtype=jnp.float32 if smoke else jnp.bfloat16,
+        store_device=smoke, rng="threefry" if smoke else "hash",
+        lr_p=0.5, lr_w=0.05, gamma=0.1, eta=0.5, chopper_p=0.05,
+    )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--algorithm", default="erider")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data-parallel", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = LM(cfg)
+    mesh = make_host_mesh(args.data_parallel, args.model_parallel)
+    set_shard_rules(sharding.logical_rules(mesh))
+
+    tcfg = TrainerConfig(
+        tile=make_tile_cfg(args.algorithm, args.smoke),
+        digital=DigitalOptConfig(kind="sgdm", clip_norm=1.0),
+        schedule=ScheduleConfig(kind="cosine", base_lr=args.lr,
+                                total_steps=args.steps, warmup_steps=min(20, args.steps // 5)),
+    )
+    trainer = AnalogTrainer(model.loss, tcfg, default_analog_filter)
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    state = trainer.init(jax.random.PRNGKey(1), params)
+
+    start_step = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        state = ckpt.restore(state, args.ckpt_dir)
+        start_step = int(np.asarray(state["step"]))
+        print(f"[train] restored checkpoint at step {start_step}")
+
+    data = BigramLM(vocab=cfg.vocab, seed=7)
+    prefetch = Prefetcher(
+        lambda s: data.batch(s, args.batch, args.seq), start_step=start_step)
+
+    step_fn = trainer.jit_step()
+    preempt = PreemptionHandler()
+    monitor = StragglerMonitor()
+    history = []
+    pending = None
+
+    it = iter(prefetch)
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        monitor.start()
+        state, metrics = step_fn(state, batch)
+        straggler = monitor.stop()
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["straggler"] = bool(straggler)
+            history.append(m)
+            print(f"[train] step={step} loss={m['loss']:.4f} "
+                  f"acc={m.get('accuracy', 0):.3f} "
+                  f"sp_err={m.get('tile/sp_err', -1):.4f} ema_s={monitor.ema:.3f}",
+                  flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            pending = ckpt.save(state, args.ckpt_dir, step + 1, asynchronous=True)
+        if preempt.should_stop:
+            print("[train] preemption signal — checkpointing and exiting")
+            if args.ckpt_dir:
+                ckpt.save(state, args.ckpt_dir, step + 1)
+            break
+    prefetch.close()
+    if args.ckpt_dir:
+        if pending is not None:
+            pending.join(timeout=60)
+        ckpt.save(state, args.ckpt_dir, int(np.asarray(state["step"])))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f, indent=2)
+    print(f"[train] done; stragglers flagged: {monitor.flagged}")
+
+
+if __name__ == "__main__":
+    main()

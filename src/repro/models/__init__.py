@@ -1,0 +1,3 @@
+"""Model zoo: composable layers + the 10 assigned architectures' backbones."""
+from . import attention, blocks, common, convnets, lm, moe, recurrent  # noqa: F401
+from .lm import LM  # noqa: F401

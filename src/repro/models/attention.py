@@ -1,0 +1,521 @@
+"""Attention variants: GQA (+qk-norm/bias), sliding-window, MLA, cross-attn.
+
+Full-sequence paths (train/prefill) use a chunked memory-efficient attention
+core (online softmax over KV chunks via lax.scan) so that 32k-prefill and
+4k-train lower with O(S * chunk) live attention memory instead of O(S^2).
+
+Decode paths attend a single query over the cache; MLA decodes in the
+*weight-absorbed* latent form (scores and values computed directly against
+the compressed c_kv cache — the deployment-efficient form).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .common import (apply_mrope, apply_rope, constrain,
+                     constrain_attention_q, dense_init, rms_norm)
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    d, H, KV, D = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * D), cfg.dtype),
+        "wk": dense_init(ks[1], (d, KV * D), cfg.dtype),
+        "wv": dense_init(ks[2], (d, KV * D), cfg.dtype),
+        "wo": dense_init(ks[3], (H * D, d), cfg.dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * D,), cfg.dtype)
+        p["bk"] = jnp.zeros((KV * D,), cfg.dtype)
+        p["bv"] = jnp.zeros((KV * D,), cfg.dtype)
+    if cfg.qk_norm and not cross:
+        p["qn"] = jnp.zeros((D,), cfg.dtype)
+        p["kn"] = jnp.zeros((D,), cfg.dtype)
+    return p
+
+
+def init_mla(key, cfg: ModelConfig) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    nope, rope, v, ql, kvl = cfg.qk_nope, cfg.qk_rope, cfg.v_head_dim, cfg.q_lora, cfg.kv_lora
+    ks = jax.random.split(key, 7)
+    return {
+        "wdq": dense_init(ks[0], (d, ql), cfg.dtype),
+        "qln": jnp.zeros((ql,), cfg.dtype),
+        "wuq": dense_init(ks[1], (ql, H * (nope + rope)), cfg.dtype),
+        "wdkv": dense_init(ks[2], (d, kvl), cfg.dtype),
+        "kvln": jnp.zeros((kvl,), cfg.dtype),
+        "wuk": dense_init(ks[3], (kvl, H * nope), cfg.dtype),
+        "wuv": dense_init(ks[4], (kvl, H * v), cfg.dtype),
+        "wkr": dense_init(ks[5], (d, rope), cfg.dtype),
+        "wo": dense_init(ks[6], (H * v, d), cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked memory-efficient attention core
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      chunk: int = 1024, q_offset: int = 0):
+    """Memory-efficient attention with a FlashAttention-style custom VJP.
+
+    Forward: online softmax over KV chunks (O(Sq*chunk) live scores).
+    Backward: recomputes the probabilities per chunk from (q,k,v,lse) —
+    without this, autodiff through the scan would save O(Sq*Sk) residuals
+    and train_4k/prefill_32k could not fit HBM.
+    """
+    return _flash(q, k, v, causal, window, min(chunk, k.shape[1]), q_offset)
+
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, chunk, q_offset):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, chunk, q_offset)
+    return out
+
+
+def _masked_scores(qg, kb, ci, chunk, Sk, Sq, causal, window, q_offset):
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb,
+                   preferred_element_type=jnp.float32)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = ci * chunk + jnp.arange(chunk)
+    mask = k_pos[None, :] < Sk
+    if causal:
+        mask = mask & (q_pos[:, None] >= k_pos[None, :])
+    if window and window > 0:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    return jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+
+
+def _flash_chunks(k, v, chunk):
+    B, Sk, KV, Dk = k.shape
+    Dv = v.shape[-1]
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = (Sk + pad) // chunk
+    return (k.reshape(B, n, chunk, KV, Dk).swapaxes(0, 1),
+            v.reshape(B, n, chunk, KV, Dv).swapaxes(0, 1), n)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, chunk, q_offset):
+    B, Sq, H, Dk = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    # keep q in its storage dtype (bf16 at LM scale): the MXU takes bf16
+    # operands with f32 accumulation, and every all-gather/psum of the
+    # attention activations moves half the bytes vs a f32 pre-cast
+    qg = (q * jnp.asarray(Dk ** -0.5, q.dtype)).reshape(B, Sq, KV, G, Dk)
+    kc, vc, n_chunks = _flash_chunks(k, v, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs
+        s = _masked_scores(qg, kb, ci, chunk, Sk, Sq, causal, window, q_offset)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KV, G, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(n_chunks)))
+    l_safe = jnp.maximum(l, 1e-37)
+    out = (acc / l_safe[..., None]).reshape(B, Sq, H, Dv).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, chunk, q_offset):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, chunk, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, chunk, q_offset, res, do):
+    q, k, v, out, lse = res
+    B, Sq, H, Dk = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    scale = Dk ** -0.5
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(B, Sq, KV, G, Dk)
+    dog = do.reshape(B, Sq, KV, G, Dv)
+    outg = out.reshape(B, Sq, KV, G, Dv)
+    delta = jnp.sum(dog.astype(jnp.float32) * outg.astype(jnp.float32),
+                    axis=-1)                                 # (B,Sq,KV,G)
+    kc, vc, n_chunks = _flash_chunks(k, v, chunk)
+
+    def body(dq, xs):
+        kb, vb, ci = xs
+        s = _masked_scores(qg, kb, ci, chunk, Sk, Sq, causal, window, q_offset)
+        p = jnp.exp(s - lse[..., None])                      # (B,Sq,KV,G,c)
+        pb = p.astype(vb.dtype)
+        dv_c = jnp.einsum("bqkgc,bqkgd->bckd", pb, dog,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqkgd,bckd->bqkgc", dog, vb,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - delta[..., None])).astype(kb.dtype)
+        dq = dq + jnp.einsum("bqkgc,bckd->bqkgd", ds, kb,
+                             preferred_element_type=jnp.float32) * scale
+        dk_c = jnp.einsum("bqkgc,bqkgd->bckd", ds, qg,
+                          preferred_element_type=jnp.float32)
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Sq, KV, G, Dk), jnp.float32)
+    dq, (dkc, dvc) = jax.lax.scan(body, dq0, (kc, vc, jnp.arange(n_chunks)))
+    dk = dkc.swapaxes(0, 1).reshape(B, n_chunks * chunk, KV, Dk)[:, :Sk]
+    dv = dvc.swapaxes(0, 1).reshape(B, n_chunks * chunk, KV, Dv)[:, :Sk]
+    return (dq.reshape(B, Sq, H, Dk).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def _chunked_attention_reference(
+    q,          # (B, Sq, H, Dk)
+    k,          # (B, Sk, KV, Dk)
+    v,          # (B, Sk, KV, Dv)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    q_offset: int = 0,
+):
+    """Plain (non-custom-vjp) online-softmax reference used in tests."""
+    B, Sq, H, Dk = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (Sk + pad) // chunk
+
+    qg = (q.astype(jnp.float32) * (Dk ** -0.5)).reshape(B, Sq, KV, G, Dk)
+    kc = k.reshape(B, n_chunks, chunk, KV, Dk).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, KV, Dv).swapaxes(0, 1)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs
+        s = jnp.einsum(
+            "bqkgd,bckd->bqkgc", qg, kb.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = k_pos[None, :] < Sk
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        if window and window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vb.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KV, G, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, k_pos, pos, window: int = 0):
+    """Single-token attention over a cache.
+
+    q: (B, 1, H, Dk); k/v: (B, Sc, KV, D*); k_pos: (Sc,) stored absolute
+    positions (-1 = empty slot); pos: scalar current position.
+    """
+    B, _, H, Dk = q.shape
+    _, Sc, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    qg = (q.astype(jnp.float32) * (Dk ** -0.5)).reshape(B, KV, G, Dk)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if window and window > 0:
+        valid = valid & (k_pos > pos - window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA full-sequence + decode
+# ---------------------------------------------------------------------------
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    B, S, d = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, H, D)
+    k = k.reshape(B, S, KV, D)
+    v = v.reshape(B, S, KV, D)
+    if "qn" in p:
+        q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k = rms_norm(k, p["kn"], cfg.norm_eps)
+    return q, k, v
+
+
+def _rope_qk(q, k, positions, cfg: ModelConfig):
+    if cfg.rope_type == "mrope":
+        if positions.ndim == q.ndim - 1:  # (B,S) text-only -> same pos 3x
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_base)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_base)
+    else:
+        q = apply_rope(q, positions, cfg.rope_base)
+        k = apply_rope(k, positions, cfg.rope_base)
+    return q, k
+
+
+def attn_forward(p, x, cfg: ModelConfig, *, kind: str, positions, causal=True):
+    """Full-sequence self-attention ('attn' | 'attn_local')."""
+    q, k, v = _qkv(p, x, cfg)
+    q, k = _rope_qk(q, k, positions, cfg)
+    q = constrain_attention_q(q)
+    window = cfg.window if kind == "attn_local" else 0
+    out = chunked_attention(q, k, v, causal=causal, window=window, chunk=cfg.attn_chunk)
+    out = out.reshape(x.shape[0], x.shape[1], -1) @ p["wo"]
+    return constrain(out, "batch", None, "embed")
+
+
+def attn_prefill(p, x, cfg: ModelConfig, *, kind: str, positions, cache):
+    """Full-sequence forward that also fills the KV cache."""
+    q, k, v = _qkv(p, x, cfg)
+    q, k = _rope_qk(q, k, positions, cfg)
+    window = cfg.window if kind == "attn_local" else 0
+    out = chunked_attention(q, k, v, causal=True, window=window, chunk=cfg.attn_chunk)
+    out = out.reshape(x.shape[0], x.shape[1], -1) @ p["wo"]
+    S = x.shape[1]
+    Sc = cache["k"].shape[1]
+    if Sc >= S:
+        newk = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        newv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        kpos = jax.lax.dynamic_update_slice(cache["pos"], jnp.arange(S, dtype=jnp.int32), (0,))
+    else:  # ring buffer smaller than prompt: keep the last Sc positions
+        newk = k[:, S - Sc:].astype(cache["k"].dtype)
+        newv = v[:, S - Sc:].astype(cache["v"].dtype)
+        kpos = jnp.arange(S - Sc, S, dtype=jnp.int32)
+        # ring order: slot = pos % Sc
+        perm = jnp.argsort(kpos % Sc)
+        newk = newk[:, perm]
+        newv = newv[:, perm]
+        kpos = kpos[perm]
+    cache = dict(cache, k=newk, v=newv, pos=kpos)
+    return out, cache
+
+
+def attn_decode(p, x, cfg: ModelConfig, *, kind: str, pos, cache):
+    """One-token decode. cache: {'k','v': (B,Sc,KV,D), 'pos': (Sc,)}."""
+    B = x.shape[0]
+    q, k, v = _qkv(p, x, cfg)
+    posb = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+    q, k = _rope_qk(q, k, posb, cfg)
+    Sc = cache["k"].shape[1]
+    slot = pos % Sc  # ring when local; Sc >= S_max when global
+    newk = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    newv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    kpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None].astype(jnp.int32), (slot,))
+    window = cfg.window if kind == "attn_local" else 0
+    out = decode_attention(q, newk, newv, k_pos=kpos, pos=pos, window=window)
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    return out, dict(cache, k=newk, v=newv, pos=kpos)
+
+
+def make_attn_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int, abstract=False):
+    Sc = min(cfg.window, seq_len) if (kind == "attn_local" and cfg.window) else seq_len
+    KV, D = cfg.n_kv, cfg.head_dim
+    shapes = {
+        "k": ((batch, Sc, KV, D), cfg.dtype),
+        "v": ((batch, Sc, KV, D), cfg.dtype),
+        "pos": ((Sc,), jnp.int32),
+    }
+    if abstract:
+        return {n: jax.ShapeDtypeStruct(s, dt) for n, (s, dt) in shapes.items()}
+    c = {n: jnp.zeros(s, dt) for n, (s, dt) in shapes.items()}
+    c["pos"] = jnp.full((Sc,), -1, jnp.int32)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    H, nope, rope = cfg.n_heads, cfg.qk_nope, cfg.qk_rope
+    ql = rms_norm(x @ p["wdq"], p["qln"], cfg.norm_eps)
+    q = (ql @ p["wuq"]).reshape(B, S, H, nope + rope)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_base)
+    return q_nope, q_pe
+
+
+def _mla_kv_latent(p, x, cfg: ModelConfig, positions):
+    ckv = rms_norm(x @ p["wdkv"], p["kvln"], cfg.norm_eps)  # (B,S,kvl)
+    k_pe = apply_rope((x @ p["wkr"])[:, :, None, :], positions, cfg.rope_base)[:, :, 0]
+    return ckv, k_pe
+
+
+def mla_forward(p, x, cfg: ModelConfig, *, positions, causal=True):
+    """Train/prefill MLA.
+
+    Two lowerings of the same math:
+      expanded — materializes per-head K/V from the latent (HF-style);
+                 K-side traffic H*(nope+rope+v) per token.
+      absorbed — attends directly against the shared latent (c_kv ++ k_pe,
+                 KV=1): K-side traffic (kv_lora+rope) per token — ~20x less
+                 HBM movement for ~(kv_lora/nope)x more score FLOPs. The
+                 right trade when the memory term dominates (§Perf).
+    """
+    if cfg.mla_absorbed:
+        return _mla_forward_absorbed(p, x, cfg, positions=positions, causal=causal)
+    B, S, _ = x.shape
+    H, nope, v_dim = cfg.n_heads, cfg.qk_nope, cfg.v_head_dim
+    q_nope, q_pe = _mla_q(p, x, cfg, positions)
+    ckv, k_pe = _mla_kv_latent(p, x, cfg, positions)
+    k_nope = (ckv @ p["wuk"]).reshape(B, S, H, nope)
+    v = (ckv @ p["wuv"]).reshape(B, S, H, v_dim)
+    q = constrain_attention_q(jnp.concatenate([q_nope, q_pe], axis=-1))
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, cfg.qk_rope))], axis=-1)
+    out = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    out = out.reshape(B, S, H * v_dim) @ p["wo"]
+    return constrain(out, "batch", None, "embed")
+
+
+def _mla_forward_absorbed(p, x, cfg: ModelConfig, *, positions, causal=True):
+    B, S, _ = x.shape
+    H, nope, v_dim, kvl, rope = (cfg.n_heads, cfg.qk_nope, cfg.v_head_dim,
+                                 cfg.kv_lora, cfg.qk_rope)
+    q_nope, q_pe = _mla_q(p, x, cfg, positions)
+    ckv, k_pe = _mla_kv_latent(p, x, cfg, positions)
+    wuk = p["wuk"].reshape(kvl, H, nope)
+    q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope, wuk)        # (B,S,H,kvl)
+    # flash scales by (kvl+rope)^-1/2; the true scale is (nope+rope)^-1/2
+    fix = ((kvl + rope) / (nope + rope)) ** 0.5
+    q = jnp.concatenate([q_lat, q_pe], axis=-1) * jnp.asarray(fix, q_lat.dtype)
+    q = constrain_attention_q(q)
+    k = jnp.concatenate([ckv, k_pe], axis=-1)[:, :, None, :]  # (B,S,1,kvl+r)
+    v = ckv[:, :, None, :]                                    # (B,S,1,kvl)
+    o_lat = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    wuv = p["wuv"].reshape(kvl, H, v_dim)
+    out = jnp.einsum("bqhk,khv->bqhv", o_lat, wuv)
+    out = out.reshape(B, S, H * v_dim) @ p["wo"]
+    return constrain(out, "batch", None, "embed")
+
+
+def mla_prefill(p, x, cfg: ModelConfig, *, positions, cache):
+    out = mla_forward(p, x, cfg, positions=positions)
+    ckv, k_pe = _mla_kv_latent(p, x, cfg, positions)
+    S = x.shape[1]
+    cache = dict(
+        cache,
+        ckv=jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)),
+        kpe=jax.lax.dynamic_update_slice(cache["kpe"], k_pe.astype(cache["kpe"].dtype), (0, 0, 0)),
+        pos=jax.lax.dynamic_update_slice(cache["pos"], jnp.arange(S, dtype=jnp.int32), (0,)),
+    )
+    return out, cache
+
+
+def mla_decode(p, x, cfg: ModelConfig, *, pos, cache):
+    """Weight-absorbed latent decode: attention directly on the c_kv cache."""
+    B = x.shape[0]
+    H, nope, v_dim, kvl = cfg.n_heads, cfg.qk_nope, cfg.v_head_dim, cfg.kv_lora
+    posb = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+    q_nope, q_pe = _mla_q(p, x, cfg, posb)            # (B,1,H,nope),(B,1,H,rope)
+    ckv_t, kpe_t = _mla_kv_latent(p, x, cfg, posb)    # (B,1,kvl),(B,1,rope)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_t.astype(cache["ckv"].dtype), (0, pos, 0))
+    kpe = jax.lax.dynamic_update_slice(cache["kpe"], kpe_t.astype(cache["kpe"].dtype), (0, pos, 0))
+    kpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None].astype(jnp.int32), (pos,))
+
+    wuk = p["wuk"].reshape(kvl, H, nope)
+    # absorb W_uk into the query: (B,1,H,kvl)
+    q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope.astype(jnp.float32), wuk.astype(jnp.float32))
+    scale = (nope + cfg.qk_rope) ** -0.5
+    s = jnp.einsum("bqhk,bsk->bhqs", q_lat, ckv.astype(jnp.float32)) + jnp.einsum(
+        "bqhr,bsr->bhqs", q_pe.astype(jnp.float32), kpe.astype(jnp.float32))
+    s = s * scale
+    valid = (kpos >= 0) & (kpos <= pos)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsk->bqhk", pattn, ckv.astype(jnp.float32))  # (B,1,H,kvl)
+    wuv = p["wuv"].reshape(kvl, H, v_dim)
+    out = jnp.einsum("bqhk,khv->bqhv", o_lat, wuv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * v_dim).astype(x.dtype) @ p["wo"]
+    return out, dict(cache, ckv=ckv, kpe=kpe, pos=kpos)
+
+
+def make_mla_cache(cfg: ModelConfig, batch: int, seq_len: int, abstract=False):
+    shapes = {
+        "ckv": ((batch, seq_len, cfg.kv_lora), cfg.dtype),
+        "kpe": ((batch, seq_len, cfg.qk_rope), cfg.dtype),
+        "pos": ((seq_len,), jnp.int32),
+    }
+    if abstract:
+        return {n: jax.ShapeDtypeStruct(s, dt) for n, (s, dt) in shapes.items()}
+    c = {n: jnp.zeros(s, dt) for n, (s, dt) in shapes.items()}
+    c["pos"] = jnp.full((seq_len,), -1, jnp.int32)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def cross_forward(p, x, enc_out, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    Se = enc_out.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, H, D)
+    k = (enc_out @ p["wk"]).reshape(B, Se, KV, D)
+    v = (enc_out @ p["wv"]).reshape(B, Se, KV, D)
+    out = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return out.reshape(B, S, H * D) @ p["wo"]

@@ -1,0 +1,308 @@
+"""Layer blocks + the period-scan stack machinery.
+
+A model stack = ``prefix`` layers (unrolled; e.g. DeepSeek's leading dense-
+FFN layer) + ``body`` = cfg.pattern repeated cfg.n_periods times (params
+stacked on a scan axis per position-in-period — one period of HLO regardless
+of depth) + ``tail`` layers (unrolled; e.g. RecurrentGemma's trailing
+[rec, rec]).
+
+Every layer kind owns: pre-norm -> sequence mixer -> residual -> pre-norm ->
+MLP/MoE -> residual (SSD blocks have no separate MLP). Decoder stacks in
+enc-dec models additionally carry a cross-attention sub-block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import recurrent as rec_mod
+from .common import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# single-layer init/apply
+# ---------------------------------------------------------------------------
+
+
+def _layer_is_moe(cfg: ModelConfig, global_idx: int) -> bool:
+    return bool(cfg.n_experts) and global_idx >= cfg.first_dense_layers
+
+
+def init_layer(key, cfg: ModelConfig, kind: str, global_idx: int, cross: bool = False) -> Dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), cfg.dtype)}
+    if kind in ("attn", "attn_local"):
+        p["attn"] = attn.init_attn(ks[0], cfg)
+    elif kind == "mla":
+        p["attn"] = attn.init_mla(ks[0], cfg)
+    elif kind == "rec":
+        p["mix"] = rec_mod.init_rglru(ks[0], cfg)
+    elif kind == "ssm":
+        p["mix"] = rec_mod.init_ssm(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind != "ssm":
+        p["ln2"] = jnp.zeros((d,), cfg.dtype)
+        if _layer_is_moe(cfg, global_idx):
+            p["moe"] = moe_mod.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = moe_mod.init_mlp(ks[1], cfg)
+    if cross:
+        p["lnx"] = jnp.zeros((d,), cfg.dtype)
+        p["cross"] = attn.init_attn(ks[2], cfg, cross=True)
+    return p
+
+
+def make_layer_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                     enc_len: int = 0, cross: bool = False, abstract=False) -> Dict:
+    c: Dict[str, Any] = {}
+    if kind in ("attn", "attn_local"):
+        c["kv"] = attn.make_attn_cache(cfg, kind, batch, seq_len, abstract)
+    elif kind == "mla":
+        c["kv"] = attn.make_mla_cache(cfg, batch, seq_len, abstract)
+    elif kind == "rec":
+        c["state"] = rec_mod.make_rglru_state(cfg, batch, abstract)
+    elif kind == "ssm":
+        c["state"] = rec_mod.make_ssm_state(cfg, batch, abstract)
+    if cross:
+        KV, D = cfg.n_kv, cfg.head_dim
+        shp = {"ck": ((batch, enc_len, KV, D), cfg.dtype),
+               "cv": ((batch, enc_len, KV, D), cfg.dtype)}
+        if abstract:
+            c.update({n: jax.ShapeDtypeStruct(s, dt) for n, (s, dt) in shp.items()})
+        else:
+            c.update({n: jnp.zeros(s, dt) for n, (s, dt) in shp.items()})
+    return c
+
+
+def apply_layer(
+    p: Dict,
+    x,
+    cfg: ModelConfig,
+    kind: str,
+    mode: str,                 # fwd | prefill | decode
+    *,
+    positions=None,
+    cache: Optional[Dict] = None,
+    pos=None,
+    enc_out=None,
+    causal: bool = True,
+) -> Tuple[Any, jnp.ndarray, Optional[Dict]]:
+    """Returns (x_out, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = dict(cache) if cache is not None else {}
+    rs = cfg.residual_scale
+
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "attn_local"):
+        if mode == "fwd":
+            mix = attn.attn_forward(p["attn"], h, cfg, kind=kind, positions=positions, causal=causal)
+        elif mode == "prefill":
+            mix, new_cache["kv"] = attn.attn_prefill(p["attn"], h, cfg, kind=kind,
+                                                     positions=positions, cache=cache["kv"])
+        else:
+            mix, new_cache["kv"] = attn.attn_decode(p["attn"], h, cfg, kind=kind,
+                                                    pos=pos, cache=cache["kv"])
+    elif kind == "mla":
+        if mode == "fwd":
+            mix = attn.mla_forward(p["attn"], h, cfg, positions=positions, causal=causal)
+        elif mode == "prefill":
+            mix, new_cache["kv"] = attn.mla_prefill(p["attn"], h, cfg,
+                                                    positions=positions, cache=cache["kv"])
+        else:
+            mix, new_cache["kv"] = attn.mla_decode(p["attn"], h, cfg, pos=pos, cache=cache["kv"])
+    elif kind == "rec":
+        if mode in ("fwd", "prefill"):
+            if mode == "prefill":
+                mix, new_cache["state"] = rec_mod.rglru_forward_with_state(p["mix"], h, cfg)
+            else:
+                mix = rec_mod.rglru_forward(p["mix"], h, cfg)
+        else:
+            mix, new_cache["state"] = rec_mod.rglru_decode(p["mix"], h, cache["state"], cfg)
+    elif kind == "ssm":
+        if mode in ("fwd", "prefill"):
+            if mode == "prefill":
+                mix, new_cache["state"] = rec_mod.ssm_forward_with_state(p["mix"], h, cfg)
+            else:
+                mix = rec_mod.ssm_forward(p["mix"], h, cfg)
+        else:
+            mix, new_cache["state"] = rec_mod.ssm_decode(p["mix"], h, cache["state"], cfg)
+    else:
+        raise ValueError(kind)
+    x = x + rs * mix
+
+    if "cross" in p:
+        hx = rms_norm(x, p["lnx"], cfg.norm_eps)
+        if mode == "fwd":
+            cx = attn.cross_forward(p["cross"], hx, enc_out, cfg)
+        else:
+            # cross K/V cached (built at prefill); decode/prefill reuse them
+            if mode == "prefill":
+                B, Se, _ = enc_out.shape
+                KV, D = cfg.n_kv, cfg.head_dim
+                ck = (enc_out @ p["cross"]["wk"]).reshape(B, Se, KV, D)
+                cv = (enc_out @ p["cross"]["wv"]).reshape(B, Se, KV, D)
+                new_cache["ck"], new_cache["cv"] = ck, cv
+                cx = attn.cross_forward(p["cross"], hx, enc_out, cfg)
+            else:
+                B = hx.shape[0]
+                H, D = cfg.n_heads, cfg.head_dim
+                q = (hx @ p["cross"]["wq"]).reshape(B, 1, H, D)
+                Se = cache["ck"].shape[1]
+                kpos = jnp.arange(Se, dtype=jnp.int32)
+                out = attn.decode_attention(q, cache["ck"], cache["cv"],
+                                            k_pos=kpos, pos=jnp.int32(Se))
+                cx = out.reshape(B, 1, H * D) @ p["cross"]["wo"]
+                new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+        x = x + rs * cx
+
+    if kind != "ssm":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            ff, aux = moe_mod.moe_forward(p["moe"], h2, cfg)
+        else:
+            ff = moe_mod.mlp_forward(p["mlp"], h2, cfg)
+        x = x + rs * ff
+    return x, aux, (new_cache if (cache is not None or mode != "fwd") else None)
+
+
+# ---------------------------------------------------------------------------
+# stack machinery: prefix (unrolled) + body (scanned periods) + tail
+# ---------------------------------------------------------------------------
+
+
+def stack_structure(cfg: ModelConfig) -> Tuple[List[str], List[str], List[str], int]:
+    kinds = list(cfg.layer_kinds)
+    nprefix = cfg.first_dense_layers
+    prefix = kinds[:nprefix]
+    rest = kinds[nprefix:]
+    period = list(cfg.pattern)
+    tail = list(cfg.tail)
+    # how many full periods fit in `rest` before the tail
+    body_len = len(rest) - len(tail)
+    assert body_len % len(period) == 0, (cfg.name, body_len, period)
+    n_periods = body_len // len(period)
+    return prefix, period, tail, n_periods
+
+
+def init_stack(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    prefix, period, tail, n_periods = stack_structure(cfg)
+    params: Dict[str, Any] = {"prefix": {}, "body": {}, "tail": {}}
+    kidx = 0
+
+    def nk():
+        nonlocal kidx
+        kidx += 1
+        return jax.random.fold_in(key, kidx)
+
+    for i, kind in enumerate(prefix):
+        params["prefix"][f"l{i}"] = init_layer(nk(), cfg, kind, i, cross)
+    for j, kind in enumerate(period):
+        if n_periods == 0:
+            continue
+        keys = jax.random.split(nk(), n_periods)
+        gidx = len(prefix) + j  # MoE-ness is uniform across periods by construction
+        params["body"][f"p{j}"] = jax.vmap(
+            lambda k: init_layer(k, cfg, kind, gidx, cross)
+        )(keys)
+    for i, kind in enumerate(tail):
+        gidx = len(prefix) + n_periods * len(period) + i
+        params["tail"][f"l{i}"] = init_layer(nk(), cfg, kind, gidx, cross)
+    return params
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, seq_len: int, *, enc_len=0,
+                     cross=False, abstract=False) -> Dict:
+    prefix, period, tail, n_periods = stack_structure(cfg)
+    cache: Dict[str, Any] = {"prefix": {}, "body": {}, "tail": {}}
+    for i, kind in enumerate(prefix):
+        cache["prefix"][f"l{i}"] = make_layer_cache(cfg, kind, batch, seq_len, enc_len, cross, abstract)
+    for j, kind in enumerate(period):
+        if n_periods == 0:
+            continue
+        one = make_layer_cache(cfg, kind, batch, seq_len, enc_len, cross, abstract)
+
+        def stack_leaf(leaf):
+            if abstract:
+                return jax.ShapeDtypeStruct((n_periods,) + leaf.shape, leaf.dtype)
+            return jnp.broadcast_to(leaf[None], (n_periods,) + leaf.shape).copy()
+
+        cache["body"][f"p{j}"] = jax.tree.map(stack_leaf, one)
+    for i, kind in enumerate(tail):
+        cache["tail"][f"l{i}"] = make_layer_cache(cfg, kind, batch, seq_len, enc_len, cross, abstract)
+    return cache
+
+
+def apply_stack(
+    params: Dict,
+    x,
+    cfg: ModelConfig,
+    mode: str,
+    *,
+    positions=None,
+    caches: Optional[Dict] = None,
+    pos=None,
+    enc_out=None,
+    causal: bool = True,
+) -> Tuple[Any, jnp.ndarray, Optional[Dict]]:
+    prefix, period, tail, n_periods = stack_structure(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {"prefix": {}, "body": {}, "tail": {}}
+
+    def run_layer(p, x, kind, cache):
+        return apply_layer(p, x, cfg, kind, mode, positions=positions,
+                           cache=cache, pos=pos, enc_out=enc_out, causal=causal)
+
+    # ---- prefix (unrolled)
+    for i, kind in enumerate(prefix):
+        c = caches["prefix"][f"l{i}"] if caches else None
+        x, aux, nc = run_layer(params["prefix"][f"l{i}"], x, kind, c)
+        aux_total += aux
+        if nc is not None:
+            new_caches["prefix"][f"l{i}"] = nc
+
+    # ---- body (scan over periods)
+    if n_periods > 0:
+        body_params = tuple(params["body"][f"p{j}"] for j in range(len(period)))
+        body_caches = (
+            tuple(caches["body"][f"p{j}"] for j in range(len(period))) if caches else None
+        )
+
+        def period_fn(carry, xs):
+            h, aux_acc = carry
+            ps = xs[0]
+            cs = xs[1] if body_caches is not None else (None,) * len(period)
+            new_cs = []
+            for j, kind in enumerate(period):
+                h, aux, nc = run_layer(ps[j], h, kind, cs[j])
+                aux_acc = aux_acc + aux
+                new_cs.append(nc)
+            ys = tuple(new_cs) if body_caches is not None else None
+            return (h, aux_acc), ys
+
+        fn = period_fn
+        if cfg.remat and mode == "fwd":
+            fn = jax.checkpoint(period_fn, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (body_params,) if body_caches is None else (body_params, body_caches)
+        (x, aux_total), ys = jax.lax.scan(fn, (x, aux_total), xs)
+        if body_caches is not None and ys is not None:
+            for j in range(len(period)):
+                new_caches["body"][f"p{j}"] = ys[j]
+
+    # ---- tail (unrolled)
+    for i, kind in enumerate(tail):
+        c = caches["tail"][f"l{i}"] if caches else None
+        x, aux, nc = run_layer(params["tail"][f"l{i}"], x, kind, c)
+        aux_total += aux
+        if nc is not None:
+            new_caches["tail"][f"l{i}"] = nc
+
+    return x, aux_total, (new_caches if caches is not None else None)

@@ -1,0 +1,198 @@
+"""Shared model building blocks: norms, RoPE/M-RoPE, inits, shard hints.
+
+Models are *functional*: ``init(key, cfg) -> params`` (nested dicts of
+arrays) and pure apply functions. Parameter names are stable and descriptive
+(e.g. ``layers/attn/wq``) — the sharding layer maps name patterns to
+PartitionSpecs (MaxText-style logical rules, see distributed/sharding.py),
+and the analog trainer selects tiles by the same paths.
+"""
+from __future__ import annotations
+
+import contextvars
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# sharding hints (active only when a launcher installs rules)
+# ---------------------------------------------------------------------------
+
+_ACTIVE_RULES: contextvars.ContextVar = contextvars.ContextVar("shard_rules", default=None)
+
+
+def set_shard_rules(rules) -> None:
+    """Install (mesh, {logical_name: mesh_axis|None}) for constrain()."""
+    _ACTIVE_RULES.set(rules)
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """Apply with_sharding_constraint if launcher rules are active.
+
+    Divisibility-aware: a hint whose dim doesn't divide by the mesh-axis
+    size is dropped (padding a 8-head tensor onto a 16-way axis makes GSPMD
+    thrash through involuntary rematerializations)."""
+    rules = _ACTIVE_RULES.get()
+    if rules is None:
+        return x
+    mesh, table = rules
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def axis_size(a):
+        if a is None:
+            return 1
+        names = a if isinstance(a, tuple) else (a,)
+        n = 1
+        for nm in names:
+            n *= mesh.shape[nm]
+        return n
+
+    axes = []
+    for i, name in enumerate(logical_axes):
+        a = table.get(name)
+        n = axis_size(a)
+        if a is not None and n > 1 and x.shape[i] % n == 0:
+            axes.append(a)
+        else:
+            axes.append(None)
+    if all(a is None for a in axes):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, PartitionSpec(*axes)))
+
+
+def constrain_attention_q(q):
+    """Shard a (B, Sq, H, D) query for attention: put the model axis on
+    heads when H divides it, otherwise on the *sequence* dim (sequence-
+    parallel attention) — without this, archs whose head count doesn't
+    divide the model axis (e.g. 40 heads on 16 ways) leave the model axis
+    idle and every device carries full S x chunk score blocks (§Perf)."""
+    rules = _ACTIVE_RULES.get()
+    if rules is None:
+        return q
+    mesh, table = rules
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    model_ax = table.get("heads")
+    batch_ax = table.get("batch")
+    if model_ax is None:
+        return q
+    msize = mesh.shape[model_ax] if not isinstance(model_ax, tuple) else 0
+    B, Sq, H, D = q.shape
+    if msize and msize > 1 and H % msize == 0:
+        spec = PartitionSpec(batch_ax, None, model_ax, None)
+    else:
+        # NOTE: a sequence-sharded fallback (Sq on the model axis) was tried
+        # and refuted — without a fully sequence-parallel residual stream the
+        # per-layer reshards cost more than the score sharding saves
+        # (EXPERIMENTS.md §Perf, minicpm3 iterations 3-4).
+        return q
+    return jax.lax.with_sharding_constraint(q, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape: Sequence[int], dtype, fan_in: Optional[int] = None):
+    fi = fan_in if fan_in is not None else shape[0]
+    std = fi ** -0.5
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def softcap(x, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, base: float):
+    half = head_dim // 2
+    return base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, base: float = 10000.0):
+    """x: (..., S, H, D); positions: (..., S) int. Rotates pairs (even, odd
+    halves split convention)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, base)  # (d/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections: Tuple[int, ...], base: float = 10000.0):
+    """Multimodal RoPE (Qwen2-VL): positions3 (3, ..., S) for (t, h, w);
+    frequency channels are split into per-section groups, each rotated by its
+    own position stream. ``sum(sections) == head_dim // 2``."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, d)
+    freqs = rope_freqs(d, base)  # (half,)
+    # build per-channel positions by section
+    angs = []
+    off = 0
+    for i, sec in enumerate(sections):
+        pos = positions3[i]  # (..., S)
+        ang = pos[..., :, None].astype(jnp.float32) * freqs[off : off + sec]
+        angs.append(ang)
+        off += sec
+    ang = jnp.concatenate(angs, axis=-1)  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, mask=None, z_loss: float = 1e-4):
+    """Token-level CE in f32 with optional z-loss; returns (loss, aux)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    ce = lse - ll
+    zl = z_loss * jnp.square(lse)
+    per_tok = ce + zl
+    if mask is None:
+        mask = jnp.ones_like(ce)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(per_tok * mask) / denom
+    acc = jnp.sum((jnp.argmax(lf, -1) == labels) * mask) / denom
+    return loss, {"ce": jnp.sum(ce * mask) / denom, "accuracy": acc}

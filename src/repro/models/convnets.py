@@ -1,0 +1,100 @@
+"""The paper's own workloads: fully-analog FCN and LeNet-5 (App. F.3).
+
+FCN:     784 -> 256 -> 128 -> 10, sigmoid hidden activations.
+LeNet-5: conv5x5(16) -> pool -> conv5x5(32) -> pool -> fc512 -> fc128 -> 10,
+         tanh hidden activations.
+
+Both expose init/loss compatible with repro.core.trainer.AnalogTrainer; all
+matmul/conv weights are analog-tileable (biases stay digital).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNetConfig:
+    kind: str = "fcn"          # fcn | lenet5
+    n_classes: int = 10
+    image_size: int = 28
+    channels: int = 1
+
+
+def init_convnet(key, cfg: ConvNetConfig) -> Dict:
+    ks = jax.random.split(key, 8)
+
+    def dense(k, shape):
+        std = shape[0] ** -0.5
+        return std * jax.random.truncated_normal(k, -2, 2, shape, jnp.float32)
+
+    if cfg.kind == "fcn":
+        d_in = cfg.image_size * cfg.image_size * cfg.channels
+        return {
+            "fc1": {"w": dense(ks[0], (d_in, 256)), "b": jnp.zeros(256)},
+            "fc2": {"w": dense(ks[1], (256, 128)), "b": jnp.zeros(128)},
+            "out": {"w": dense(ks[2], (128, cfg.n_classes)), "b": jnp.zeros(cfg.n_classes)},
+        }
+    if cfg.kind == "lenet5":
+        def conv(k, shape):  # HWIO
+            fan_in = shape[0] * shape[1] * shape[2]
+            return fan_in ** -0.5 * jax.random.truncated_normal(k, -2, 2, shape, jnp.float32)
+
+        s = cfg.image_size // 4  # two 2x2 pools
+        return {
+            "conv1": {"w": conv(ks[0], (5, 5, cfg.channels, 16)), "b": jnp.zeros(16)},
+            "conv2": {"w": conv(ks[1], (5, 5, 16, 32)), "b": jnp.zeros(32)},
+            "fc1": {"w": dense(ks[2], (s * s * 32, 512)), "b": jnp.zeros(512)},
+            "fc2": {"w": dense(ks[3], (512, 128)), "b": jnp.zeros(128)},
+            "out": {"w": dense(ks[4], (128, cfg.n_classes)), "b": jnp.zeros(cfg.n_classes)},
+        }
+    raise ValueError(cfg.kind)
+
+
+def _conv2d(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def convnet_logits(params, images, cfg: ConvNetConfig):
+    """images: (B, H, W, C) float32."""
+    if cfg.kind == "fcn":
+        x = images.reshape(images.shape[0], -1)
+        x = jax.nn.sigmoid(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        x = jax.nn.sigmoid(x @ params["fc2"]["w"] + params["fc2"]["b"])
+        return x @ params["out"]["w"] + params["out"]["b"]
+    x = jnp.tanh(_conv2d(images, params["conv1"]["w"], params["conv1"]["b"]))
+    x = _maxpool(x)
+    x = jnp.tanh(_conv2d(x, params["conv2"]["w"], params["conv2"]["b"]))
+    x = _maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.tanh(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jnp.tanh(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["out"]["w"] + params["out"]["b"]
+
+
+def make_loss_fn(cfg: ConvNetConfig):
+    def loss_fn(params, batch, rng) -> Tuple[jnp.ndarray, Dict]:
+        logits = convnet_logits(params, batch["x"], cfg)
+        labels = batch["y"]
+        logp = jax.nn.log_softmax(logits)
+        ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return ce, {"accuracy": acc}
+
+    return loss_fn
+
+
+def analog_filter(path: str, leaf) -> bool:
+    """All conv/fc weight matrices are analog (fully-analog nets, paper §4)."""
+    return path.endswith("/w")

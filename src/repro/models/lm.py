@@ -1,0 +1,144 @@
+"""Top-level language models: decoder-only CausalLM and enc-dec Seq2SeqLM.
+
+Functional API:
+  init(key) -> params                       (abstract_params() for dry-runs)
+  forward(params, tokens, frames) -> logits (train / scoring path)
+  loss(params, batch, rng) -> (loss, aux)   (next-token CE + MoE aux)
+  init_cache(batch, seq_len [, enc_len])    (decode-entry cache pytree)
+  prefill(params, batch, cache) -> (logits_last, cache)
+  decode_step(params, token, cache, pos) -> (logits, cache)
+
+Modality frontends ([audio]/[vlm]) are stubs per the assignment: ``frames``
+are precomputed frame/patch embeddings supplied by input_specs(); the VLM
+fuses them additively with token embeddings, the audio enc-dec feeds them
+directly to the encoder.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .blocks import apply_stack, init_stack, init_stack_cache
+from .common import constrain, embed_init, rms_norm, softmax_cross_entropy
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        params: Dict[str, Any] = {
+            "embed": embed_init(ks[0], (cfg.vocab, cfg.d_model), cfg.dtype),
+            "stack": init_stack(ks[1], cfg, cross=cfg.is_encdec),
+            "ln_f": jnp.zeros((cfg.d_model,), cfg.dtype),
+        }
+        if not cfg.tied_embeddings:
+            params["head"] = embed_init(ks[2], (cfg.d_model, cfg.vocab), cfg.dtype)
+        if cfg.is_encdec:
+            enc_cfg = _encoder_cfg(cfg)
+            params["enc"] = {
+                "stack": init_stack(ks[3], enc_cfg, cross=False),
+                "ln_f": jnp.zeros((cfg.d_model,), cfg.dtype),
+            }
+        return params
+
+    def abstract_params(self) -> Dict:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------- embeddings
+    def _embed(self, params, tokens, frames=None):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+        if frames is not None and not cfg.is_encdec:
+            x = x + frames.astype(x.dtype)  # VLM stub: additive patch fusion
+        return constrain(x, "batch", None, "embed")
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tied_embeddings else params["head"]
+        logits = x @ head
+        return constrain(logits, "batch", None, "vocab")
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        enc_cfg = _encoder_cfg(cfg)
+        x = frames.astype(cfg.dtype)
+        pos = jnp.arange(x.shape[1])[None]
+        x, _, _ = apply_stack(params["enc"]["stack"], x, enc_cfg, "fwd",
+                              positions=pos, causal=False)
+        return rms_norm(x, params["enc"]["ln_f"], cfg.norm_eps)
+
+    # ---------------------------------------------------------------- forward
+    def forward(self, params, tokens, frames=None):
+        cfg = self.cfg
+        enc_out = self._encode(params, frames) if cfg.is_encdec else None
+        x = self._embed(params, tokens, frames)
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None], tokens.shape)
+        x, aux, _ = apply_stack(params["stack"], x, cfg, "fwd",
+                                positions=positions, enc_out=enc_out)
+        return self._logits(params, x), aux
+
+    def loss(self, params, batch, rng) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        logits, aux_moe = self.forward(params, batch["tokens"], batch.get("frames"))
+        loss, aux = softmax_cross_entropy(logits, batch["labels"])
+        if cfg.n_experts:
+            loss = loss + cfg.aux_loss_coef * aux_moe
+            aux["moe_aux"] = aux_moe
+        return loss, aux
+
+    # ----------------------------------------------------------------- caches
+    def init_cache(self, batch: int, seq_len: int, enc_len: int = 0, abstract=False) -> Dict:
+        cfg = self.cfg
+        return init_stack_cache(cfg, batch, seq_len, enc_len=enc_len,
+                                cross=cfg.is_encdec, abstract=abstract)
+
+    def prefill(self, params, batch: Dict, cache: Dict):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        enc_out = self._encode(params, batch["frames"]) if cfg.is_encdec else None
+        x = self._embed(params, tokens, batch.get("frames"))
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None], tokens.shape)
+        x, _, cache = apply_stack(params["stack"], x, cfg, "prefill",
+                                  positions=positions, caches=cache, enc_out=enc_out)
+        return self._logits(params, x[:, -1:]), cache
+
+    def decode_step(self, params, token, cache: Dict, pos):
+        """token: (B,1) int32; pos: scalar int32 (position being written)."""
+        cfg = self.cfg
+        x = self._embed(params, token)
+        x, _, cache = apply_stack(params["stack"], x, cfg, "decode",
+                                  caches=cache, pos=pos)
+        return self._logits(params, x), cache
+
+    def serve_step(self, params, token, cache: Dict, pos):
+        """Greedy one-token serving step (what decode-shape cells lower)."""
+        logits, cache = self.decode_step(params, token, cache, pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+
+def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Encoder stack config: bidirectional full attention, n_enc_layers."""
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg,
+        n_layers=cfg.n_enc_layers,
+        pattern=("attn",),
+        n_periods=cfg.n_enc_layers,
+        tail=(),
+        first_dense_layers=0,
+        n_experts=0,
+        n_enc_layers=0,
+    )

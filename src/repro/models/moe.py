@@ -1,0 +1,195 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch.
+
+Default implementation is the GShard/Switch einsum dispatch — tokens are
+grouped, assigned expert-buffer slots by intra-group cumsum, and moved with
+one-hot dispatch/combine einsums. This partitions cleanly under GSPMD
+(experts tensor-sharded on the model axis, groups on the data axes) at the
+cost of dispatch FLOPs ~ 2*G*k*cf*group*d — visible in the roofline
+MODEL_FLOPS/HLO ratio and attacked in the §Perf hillclimb via the
+``ragged`` path (sort + jax.lax.ragged_dot, exact FLOPs).
+
+Supports DeepSeek-style shared experts (always-on dense branch).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .common import activation, constrain, dense_init
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    ff = cfg.d_ff_expert or cfg.d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "wi": dense_init(ks[1], (E, d, ff), cfg.dtype),
+        "wo": dense_init(ks[2], (E, ff, d), cfg.dtype, fan_in=ff),
+    }
+    if cfg.glu:
+        p["wg"] = dense_init(ks[3], (E, d, ff), cfg.dtype)
+    if cfg.n_shared:
+        sff = ff * cfg.n_shared
+        p["swi"] = dense_init(ks[4], (d, sff), cfg.dtype)
+        p["swo"] = dense_init(ks[5], (sff, d), cfg.dtype, fan_in=sff)
+        if cfg.glu:
+            p["swg"] = dense_init(ks[6], (d, sff), cfg.dtype)
+    return p
+
+
+def _expert_ffn(p, xe, cfg: ModelConfig):
+    """xe: (E, C, d) expert buffers -> (E, C, d)."""
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"])
+    if cfg.glu:
+        h = activation(h, cfg.activation) * jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+    else:
+        h = activation(h, cfg.activation)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+def _shared_ffn(p, x, cfg: ModelConfig):
+    h = x @ p["swi"]
+    if cfg.glu:
+        h = activation(h, cfg.activation) * (x @ p["swg"])
+    else:
+        h = activation(h, cfg.activation)
+    return h @ p["swo"]
+
+
+def moe_forward(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    n_tok = B * S
+    # largest divisor of n_tok that fits the configured group size
+    g = min(cfg.moe_group, n_tok)
+    while n_tok % g:
+        g -= 1
+    ng = n_tok // g
+    xt = x.reshape(ng, g, d)
+    xt = constrain(xt, "batch", None, "embed")
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (ng,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                        # (ng,g,k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch): E * sum(frac_tokens * frac_prob)
+    me = jnp.mean(probs, axis=(0, 1))
+    onehot_top1 = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    if n_tok <= 256:
+        # decode / tiny batches: exact per-token expert-weight gather
+        # (capacity-free; the memory-bound form real MoE decode takes)
+        y = _gather_moe(p, xt.reshape(n_tok, d), gate_vals.reshape(n_tok, k),
+                        gate_idx.reshape(n_tok, k), cfg).reshape(ng, g, d)
+        if cfg.n_shared:
+            y = y + _shared_ffn(p, xt, cfg)
+        return y.reshape(B, S, d), aux.astype(jnp.float32)
+
+    capacity = int(max(1, round(cfg.capacity_factor * g * k / E)))
+
+    if cfg.moe_impl == "einsum":
+        # slot assignment: position of each (token, slot) within its expert
+        disp_w = jnp.zeros((ng, g, E), jnp.float32)
+        combine = jnp.zeros((ng, g, E, capacity), jnp.float32)
+        prior = jnp.zeros((ng, 1, E), jnp.float32)
+        for j in range(k):
+            oh = jax.nn.one_hot(gate_idx[..., j], E, dtype=jnp.float32)   # (ng,g,E)
+            pos_in_e = jnp.cumsum(oh, axis=1) - 1.0 + prior               # (ng,g,E)
+            keep = (pos_in_e < capacity).astype(jnp.float32) * oh
+            prior = prior + jnp.sum(oh, axis=1, keepdims=True)
+            pos_clip = jnp.clip(jnp.sum(pos_in_e * oh, -1), 0, capacity - 1)
+            sel = jax.nn.one_hot(pos_clip.astype(jnp.int32), capacity, dtype=jnp.float32)
+            combine = combine + gate_vals[..., j, None, None] * keep[..., None] * sel[..., None, :]
+            disp_w = disp_w + keep
+        dispatch = (combine > 0.0).astype(xt.dtype)                       # (ng,g,E,C)
+        xe = jnp.einsum("ngec,ngd->necd", dispatch, xt)                   # (ng,E,C,d)
+        xe = constrain(xe, "batch", None, None, "embed")
+        ye = jax.vmap(lambda b: _expert_ffn(p, b, cfg))(xe)               # (ng,E,C,d)
+        y = jnp.einsum("ngec,necd->ngd", combine.astype(xt.dtype), ye)
+    elif cfg.moe_impl == "ragged":
+        y = _ragged_moe(p, xt, gate_vals, gate_idx, cfg)
+    else:
+        raise ValueError(cfg.moe_impl)
+
+    if cfg.n_shared:
+        y = y + _shared_ffn(p, xt, cfg)
+    return y.reshape(B, S, d), aux.astype(jnp.float32)
+
+
+def _gather_moe(p, x, gate_vals, gate_idx, cfg: ModelConfig):
+    """x: (n, d); per-token expert weight gather. Exact (no capacity)."""
+    wi = jnp.take(p["wi"], gate_idx, axis=0)            # (n, k, d, ff)
+    wo = jnp.take(p["wo"], gate_idx, axis=0)            # (n, k, ff, d)
+    h = jnp.einsum("nd,nkdf->nkf", x, wi)
+    if cfg.glu:
+        wg = jnp.take(p["wg"], gate_idx, axis=0)
+        h = activation(h, cfg.activation) * jnp.einsum("nd,nkdf->nkf", x, wg)
+    else:
+        h = activation(h, cfg.activation)
+    y = jnp.einsum("nkf,nkfd->nkd", h, wo)
+    return jnp.einsum("nkd,nk->nd", y, gate_vals.astype(y.dtype))
+
+
+def _ragged_moe(p, xt, gate_vals, gate_idx, cfg: ModelConfig):
+    """Sort-based grouped matmul path (exact FLOPs; §Perf hillclimb).
+
+    Flattens groups, replicates each token k times, sorts by expert id and
+    runs jax.lax.ragged_dot over per-expert contiguous rows.
+    """
+    ng, g, d = xt.shape
+    E, k = cfg.n_experts, cfg.top_k
+    n = ng * g
+    x_flat = xt.reshape(n, d)
+    eid = gate_idx.reshape(n, k)
+    gv = gate_vals.reshape(n, k)
+    # replicate tokens k times
+    tok_idx = jnp.repeat(jnp.arange(n), k)
+    e_flat = eid.reshape(-1)
+    w_flat = gv.reshape(-1).astype(xt.dtype)
+    order = jnp.argsort(e_flat)
+    tok_sorted = tok_idx[order]
+    w_sorted = w_flat[order]
+    xs = x_flat[tok_sorted]                                  # (n*k, d)
+    group_sizes = jnp.bincount(e_flat, length=E).astype(jnp.int32)
+
+    h = jax.lax.ragged_dot(xs, p["wi"], group_sizes)
+    if cfg.glu:
+        h = activation(h, cfg.activation) * jax.lax.ragged_dot(xs, p["wg"], group_sizes)
+    else:
+        h = activation(h, cfg.activation)
+    ye = jax.lax.ragged_dot(h, p["wo"], group_sizes)         # (n*k, d)
+    ye = ye * w_sorted[:, None]
+    y = jnp.zeros((n, d), ye.dtype).at[tok_sorted].add(ye)
+    return y.reshape(ng, g, d)
+
+
+def init_mlp(key, cfg: ModelConfig) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], (d, ff), cfg.dtype),
+        "wo": dense_init(ks[1], (ff, d), cfg.dtype, fan_in=ff),
+    }
+    if cfg.glu:
+        p["wg"] = dense_init(ks[2], (d, ff), cfg.dtype)
+    return p
+
+
+def mlp_forward(p, x, cfg: ModelConfig):
+    h = x @ p["wi"]
+    if cfg.glu:
+        h = activation(h, cfg.activation) * (x @ p["wg"])
+    else:
+        h = activation(h, cfg.activation)
+    h = constrain(h, "batch", None, "mlp")
+    return h @ p["wo"]

@@ -1,0 +1,321 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin/RecurrentGemma) and Mamba-2 SSD.
+
+Training paths use parallel forms (associative scan for RG-LRU; the chunked
+matmul SSD algorithm for Mamba-2 — MXU-friendly). Decode paths carry
+constant-size recurrent states, which is what makes the ``long_500k`` cell
+tractable for these families.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .common import constrain, dense_init
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (shared)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(u, w, state=None):
+    """u: (B,S,C); w: (k,C) depthwise causal. state: (B,k-1,C) prior inputs.
+
+    Returns (y, new_state) where new_state holds the last k-1 inputs.
+    """
+    k = w.shape[0]
+    if state is None:
+        up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    S = u.shape[1]
+    y = sum(w[j].astype(jnp.float32) * up[:, j : j + S].astype(jnp.float32) for j in range(k))
+    new_state = up[:, -(k - 1):] if k > 1 else None
+    return y.astype(u.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin)
+# ---------------------------------------------------------------------------
+
+
+def _rglru_blocks(cfg: ModelConfig) -> int:
+    """Gate matrices are block-diagonal by heads (Griffin) — TP-friendly:
+    each model-parallel shard owns whole blocks, the diagonal recurrence and
+    gates stay shard-local."""
+    return max(1, cfg.n_heads)
+
+
+def init_rglru(key, cfg: ModelConfig) -> Dict:
+    d, dr = cfg.d_model, cfg.rnn_width
+    nb = _rglru_blocks(cfg)
+    bk = dr // nb
+    ks = jax.random.split(key, 6)
+    # Lambda init so a = sigma(lam)^(c*r) spreads over [0.9, 0.999]
+    lam0 = jnp.log(jnp.expm1(jnp.linspace(0.001, 0.1, dr)) + 1e-8)
+    return {
+        "wx": dense_init(ks[0], (d, dr), cfg.dtype),
+        "wy": dense_init(ks[1], (d, dr), cfg.dtype),
+        "conv": dense_init(ks[2], (cfg.conv_k, dr), cfg.dtype, fan_in=cfg.conv_k),
+        "war": dense_init(ks[3], (nb, bk, bk), cfg.dtype, fan_in=bk),
+        "wai": dense_init(ks[4], (nb, bk, bk), cfg.dtype, fan_in=bk),
+        "lam": lam0.astype(jnp.float32),
+        "wout": dense_init(ks[5], (dr, d), cfg.dtype, fan_in=dr),
+    }
+
+
+def _block_gate(u, w):
+    """u: (B,S,dr) x block-diag w: (nb,bk,bk) -> (B,S,dr)."""
+    B, S, dr = u.shape
+    nb, bk, _ = w.shape
+    ub = u.reshape(B, S, nb, bk)
+    out = jnp.einsum("bsnk,nkj->bsnj", ub, w)
+    return out.reshape(B, S, dr)
+
+
+def _rglru_gates(p, u, cfg: ModelConfig):
+    r = jax.nn.sigmoid(_block_gate(u, p["war"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_gate(u, p["wai"]).astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * r  # (B,S,dr) f32
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * u.astype(jnp.float32)
+    )
+    return a, b
+
+
+def _rglru_core(p, x, cfg: ModelConfig):
+    gate = jax.nn.gelu((x @ p["wy"]).astype(jnp.float32), approximate=True)
+    u, conv_state = causal_conv(x @ p["wx"], p["conv"])
+    u = constrain(u, "batch", None, "mlp")
+    a, b = _rglru_gates(p, u, cfg)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (gate * h).astype(x.dtype) @ p["wout"]
+    return constrain(y, "batch", None, "embed"), h, conv_state
+
+
+def rglru_forward(p, x, cfg: ModelConfig):
+    """x: (B,S,d) -> (B,S,d). Parallel scan over time."""
+    y, _, _ = _rglru_core(p, x, cfg)
+    return y
+
+
+def rglru_forward_with_state(p, x, cfg: ModelConfig):
+    """Prefill: full forward + final recurrent/conv state."""
+    y, h, conv_state = _rglru_core(p, x, cfg)
+    return y, {"h": h[:, -1], "conv": conv_state}
+
+
+def rglru_decode(p, x, state: Dict, cfg: ModelConfig):
+    """x: (B,1,d); state: {'h': (B,dr) f32, 'conv': (B,k-1,dr)}."""
+    gate = jax.nn.gelu((x @ p["wy"]).astype(jnp.float32), approximate=True)
+    u, conv_state = causal_conv(x @ p["wx"], p["conv"], state["conv"])
+    a, b = _rglru_gates(p, u, cfg)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = (gate[:, 0] * h)[:, None].astype(x.dtype) @ p["wout"]
+    return y, {"h": h, "conv": conv_state}
+
+
+def make_rglru_state(cfg: ModelConfig, batch: int, abstract=False):
+    dr = cfg.rnn_width
+    shapes = {
+        "h": ((batch, dr), jnp.float32),
+        "conv": ((batch, cfg.conv_k - 1, dr), cfg.dtype),
+    }
+    if abstract:
+        return {n: jax.ShapeDtypeStruct(s, dt) for n, (s, dt) in shapes.items()}
+    return {n: jnp.zeros(s, dt) for n, (s, dt) in shapes.items()}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD — state space duality, chunked matmul form)
+# ---------------------------------------------------------------------------
+
+
+def init_ssm(key, cfg: ModelConfig) -> Dict:
+    """Input projection split into per-stream matrices (z/x/B/C/dt) so each
+    shards independently on the model axis (Mamba TP convention)."""
+    d = cfg.d_model
+    din = cfg.d_inner
+    H, N, G = cfg.ssm_heads, cfg.d_state, cfg.ssm_groups
+    ks = jax.random.split(key, 7)
+    return {
+        "wz": dense_init(ks[0], (d, din), cfg.dtype),
+        "wx": dense_init(ks[1], (d, din), cfg.dtype),
+        "wb": dense_init(ks[2], (d, G * N), cfg.dtype),
+        "wc": dense_init(ks[3], (d, G * N), cfg.dtype),
+        "wdt": dense_init(ks[4], (d, H), cfg.dtype),
+        "conv_x": dense_init(ks[5], (cfg.d_conv, din), cfg.dtype, fan_in=cfg.d_conv),
+        "conv_b": dense_init(jax.random.fold_in(ks[5], 1), (cfg.d_conv, G * N), cfg.dtype, fan_in=cfg.d_conv),
+        "conv_c": dense_init(jax.random.fold_in(ks[5], 2), (cfg.d_conv, G * N), cfg.dtype, fan_in=cfg.d_conv),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.zeros((din,), cfg.dtype),
+        "wout": dense_init(ks[6], (din, d), cfg.dtype, fan_in=din),
+    }
+
+
+def _segsum(x):
+    """x: (..., L) -> (..., L, L) lower-tri cumulative segment sums."""
+    L = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    d = xc[..., :, None] - xc[..., None, :]
+    idx = jnp.arange(L)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt_a, B, C, chunk: int):
+    """Chunked SSD (Mamba-2 alg. 3). x: (b,s,h,p) pre-multiplied by dt;
+    dt_a: (b,s,h) = A*dt (<=0); B, C: (b,s,h,n). Returns (b,s,h,p)."""
+    b, s_orig, h, p_dim = x.shape
+    n = B.shape[-1]
+    L = min(chunk, s_orig)
+    pad = (-s_orig) % L
+    if pad:
+        # zero x / dt_a padding is exact: decay over a padded tail is
+        # exp(0)=1 and contributes no state, so earlier outputs and the
+        # final state are unchanged
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_a = jnp.pad(dt_a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s_orig + pad
+    c = s // L
+
+    def ch(t):
+        return t.reshape(b, c, L, *t.shape[2:])
+
+    xc, dac, Bc, Cc = ch(x.astype(jnp.float32)), ch(dt_a.astype(jnp.float32)), ch(B.astype(jnp.float32)), ch(C.astype(jnp.float32))
+
+    a_cum = jnp.cumsum(dac, axis=2)                                   # (b,c,L,h)
+    # intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(dac.swapaxes(2, 3)))                       # (b,c,h,L,L)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)                 # (b,c,h,L,S)
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp", scores, Lmat,
+                        xc, preferred_element_type=jnp.float32)
+
+    # per-chunk final states
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)               # (b,c,L,h)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bc, decay_states, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[:, :, -1])                            # (b,c,h)
+
+    def scan_fn(prev, inp):
+        dec, st = inp
+        new = dec[:, :, None, None] * prev + st
+        return new, prev
+
+    init = jnp.zeros((b, h, p_dim, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1))
+    )
+    prev_states = prev_states.swapaxes(0, 1)                          # (b,c,h,p,n)
+
+    state_decay = jnp.exp(a_cum)                                      # (b,c,L,h)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p_dim)[:, :s_orig]
+    return y, final_state
+
+
+def _ssm_split(p, x, cfg: ModelConfig, conv_state=None):
+    H, N, G = cfg.ssm_heads, cfg.d_state, cfg.ssm_groups
+    z = x @ p["wz"]
+    xs = x @ p["wx"]
+    B_ = x @ p["wb"]
+    C_ = x @ p["wc"]
+    dt = x @ p["wdt"]                                                 # (B,S,H)
+    cs = conv_state or {}
+    xs, ncx = causal_conv(xs, p["conv_x"], cs.get("x"))
+    B_, ncb = causal_conv(B_, p["conv_b"], cs.get("b"))
+    C_, ncc = causal_conv(C_, p["conv_c"], cs.get("c"))
+    new_conv = {"x": ncx, "b": ncb, "c": ncc}
+    xs = jax.nn.silu(xs)
+    B_ = jax.nn.silu(B_)
+    C_ = jax.nn.silu(C_)
+    Bsz, S = x.shape[0], x.shape[1]
+    xs = xs.reshape(Bsz, S, H, cfg.ssm_head_dim)
+    B_ = B_.reshape(Bsz, S, G, N)
+    C_ = C_.reshape(Bsz, S, G, N)
+    rep = H // G
+    B_ = jnp.repeat(B_, rep, axis=2)
+    C_ = jnp.repeat(C_, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return z, xs, B_, C_, dt, new_conv
+
+
+def _ssm_out(p, y, z, x, cfg: ModelConfig):
+    from .common import rms_norm
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    return y @ p["wout"]
+
+
+def _ssm_core(p, x, cfg: ModelConfig):
+    z, xs, B_, C_, dt, new_conv = _ssm_split(p, x, cfg)
+    A = -jnp.exp(p["a_log"])                                          # (H,)
+    y, final = ssd_chunked(xs.astype(jnp.float32) * dt[..., None], dt * A, B_, C_, cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], cfg.d_inner)
+    out = constrain(_ssm_out(p, y, z, x, cfg), "batch", None, "embed")
+    return out, final, new_conv
+
+
+def ssm_forward(p, x, cfg: ModelConfig):
+    """x: (B,S,d) -> (B,S,d). Chunked SSD training path."""
+    out, _, _ = _ssm_core(p, x, cfg)
+    return out
+
+
+def ssm_forward_with_state(p, x, cfg: ModelConfig):
+    """Prefill: full forward + final (h, conv) state."""
+    out, final, new_conv = _ssm_core(p, x, cfg)
+    return out, {"h": final, "conv": new_conv}
+
+
+def ssm_decode(p, x, state: Dict, cfg: ModelConfig):
+    """x: (B,1,d); state: {'h': (B,H,P,N) f32, 'conv': (B,k-1,conv_dim)}."""
+    z, xs, B_, C_, dt, new_conv = _ssm_split(p, x, cfg, state["conv"])
+    A = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt[:, 0] * A)                                        # (B,H)
+    xdt = xs[:, 0].astype(jnp.float32) * dt[:, 0][..., None]          # (B,H,P)
+    h = dA[..., None, None] * state["h"] + jnp.einsum(
+        "bhp,bhn->bhpn", xdt, B_[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", h, C_[:, 0].astype(jnp.float32))
+    y = y + p["d_skip"][None, :, None] * xs[:, 0].astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, cfg.d_inner)
+    return _ssm_out(p, y, z[:, :1], x, cfg), {"h": h, "conv": new_conv}
+
+
+def make_ssm_state(cfg: ModelConfig, batch: int, abstract=False):
+    H, N, G = cfg.ssm_heads, cfg.d_state, cfg.ssm_groups
+    km1 = cfg.d_conv - 1
+    shapes = {
+        "h": ((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+        "conv": {
+            "x": ((batch, km1, cfg.d_inner), cfg.dtype),
+            "b": ((batch, km1, G * N), cfg.dtype),
+            "c": ((batch, km1, G * N), cfg.dtype),
+        },
+    }
+
+    def build(node):
+        if isinstance(node, dict):
+            return {k: build(v) for k, v in node.items()}
+        s, dt = node
+        return jax.ShapeDtypeStruct(s, dt) if abstract else jnp.zeros(s, dt)
+
+    return build(shapes)

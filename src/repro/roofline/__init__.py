@@ -1,0 +1,1 @@
+from . import analysis, hlo_cost  # noqa: F401

@@ -1,0 +1,173 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh) cell, on TPU v5e constants:
+
+  compute    = HLO_FLOPs / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+  collective = collective_bytes / (chips * 50e9 B/s per ICI link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+all devices). collective_bytes is parsed from the optimized HLO text: the
+sum of operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (per-shard shapes, so the per-device
+traffic is collective_bytes / chips x a topology factor folded into the
+link-bandwidth constant per the assignment).
+
+MODEL_FLOPS = 6*N*D for training (2ND fwd + 4ND bwd) or 2*N_active*D for
+serving; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat recompute, MoE
+dispatch waste, and masked-attention waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w+[\d.]*)\s*=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|pred|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(4)
+        ty = m.group(2) if m.group(2) is not None else m.group(3)
+        b = _shape_bytes(ty or "")
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float
+    bytes_per_device: float
+    args_bytes_per_device: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-time / achievable step time (max of the three terms):
+        the 'score' — how close the step is to the hardware roofline."""
+        t_min = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_star = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_min / max(t_star, 1e-30)
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            useful_ratio=self.useful_ratio,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+
+def analyze(
+    *, arch: str, shape: str, mesh_name: str, chips: int,
+    cost: Dict, hlo_text: str, model_flops: float, memstats=None,
+) -> Roofline:
+    """Prices the optimized per-device HLO with the trip-count-aware parser
+    (hlo_cost.py) — XLA's own cost_analysis() counts loop bodies once and is
+    kept only as a reference field. Whole-cluster totals = per-device * chips
+    (SPMD: every device runs the same module)."""
+    from . import hlo_cost
+
+    c = hlo_cost.analyze_hlo(hlo_text)
+    bpd = 0.0
+    apd = 0.0
+    if memstats is not None:
+        bpd = float(
+            getattr(memstats, "temp_size_in_bytes", 0)
+            + getattr(memstats, "output_size_in_bytes", 0)
+        )
+        apd = float(getattr(memstats, "argument_size_in_bytes", 0))
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=c.flops * chips,
+        hlo_bytes=c.bytes * chips,
+        coll_bytes=c.coll_bytes * chips,
+        coll_breakdown={k: int(v * chips) for k, v in c.coll.items()},
+        model_flops=float(model_flops),
+        bytes_per_device=bpd,
+        args_bytes_per_device=apd,
+    )
+
+
+def model_flops_for(cfg, spec) -> float:
+    """MODEL_FLOPS for a shape cell (6ND train / 2N_active D serve)."""
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n_active * tokens
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * spec.global_batch
+
+
+def save_report(r: Roofline, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(r.to_json(), f, indent=2)

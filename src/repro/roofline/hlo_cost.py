@@ -1,0 +1,299 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` has two blind spots for our dry-runs:
+it reports the *per-device* module and it counts while-loop bodies ONCE —
+a layer-stack scan of 59 periods is undercounted 59x. The optimized HLO
+text, however, annotates every static loop with
+``backend_config={"known_trip_count":{"n":...}}``.
+
+This module parses the HLO into computations, prices each instruction, and
+walks the call graph from ENTRY multiplying loop bodies by their trip
+counts. Prices:
+
+  flops            — dot ops: 2 * batch * M * N * K from the dot dimension
+                     numbers + operand shapes (convolutions priced from the
+                     result shape * kernel volume).
+  memory bytes     — operand + result bytes of every instruction at fusion
+                     boundaries (internals of a fusion are free = the fusion
+                     is one HBM round trip, which is how the TPU behaves).
+  collective bytes — result bytes of all-reduce/all-gather/reduce-scatter/
+                     all-to-all/collective-permute, trip-weighted.
+
+Numbers are per-device (the SPMD module); multiply by chip count for
+whole-cluster totals.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+# TYPE may be a tuple spanning `/*index=N*/` comments; lazy-match up to the
+# first ` opcode(` boundary (opcode = word chars immediately before '(').
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s([a-z][a-zA-Z\d\-]*)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*->")
+_CALLS_RE = re.compile(r"(?:calls=|to_apply=|body=)%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_DIMS_RE = {
+    k: re.compile(k + r"=\{([\d,]*)\}")
+    for k in ("lhs_contracting_dims", "rhs_contracting_dims",
+              "lhs_batch_dims", "rhs_batch_dims")
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops with no real data movement
+_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "after-all", "partition-id", "replica-id", "iota", "custom-call"}
+
+
+def _type_bytes_elems(type_str: str) -> Tuple[int, int]:
+    total_b = 0
+    total_e = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dt]
+        total_e += n
+    return total_b, total_e
+
+
+def _dims_of(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m,
+                    {k: v * m for k, v in self.coll.items()})
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if not line.strip() or line.strip().startswith("//"):
+            continue
+        if not line.startswith(" ") and ("->" in line) and line.rstrip().endswith("{"):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands run until the first unparenthesized ')'
+    depth = 0
+    out = []
+    token = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+            token += ch
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+            token += ch
+        else:
+            token += ch
+    for part in token.split(","):
+        part = part.strip()
+        if part.startswith("%"):
+            out.append(part[1:])
+    return out
+
+
+def _dot_flops(instr: Instr, types: Dict[str, str]) -> float:
+    ops = _operand_names(instr.rest)
+    if len(ops) < 2:
+        return 0.0
+    lhs_t = types.get(ops[0], "")
+    rhs_t = types.get(ops[1], "")
+    lhs = _dims_of(lhs_t)
+    rhs = _dims_of(rhs_t)
+    if not lhs or not rhs:
+        return 0.0
+
+    def dims(key):
+        m = _DIMS_RE[key].search(instr.rest)
+        if not m or not m.group(1):
+            return []
+        return [int(x) for x in m.group(1).split(",")]
+
+    lc = dims("lhs_contracting_dims")
+    rc = dims("rhs_contracting_dims")
+    lb = dims("lhs_batch_dims")
+    rb = dims("rhs_batch_dims")
+    batch = math.prod([lhs[i] for i in lb]) if lb else 1
+    k = math.prod([lhs[i] for i in lc]) if lc else 1
+    m_dim = math.prod([d for i, d in enumerate(lhs) if i not in lc + lb])
+    n_dim = math.prod([d for i, d in enumerate(rhs) if i not in rc + rb])
+    return 2.0 * batch * m_dim * k * n_dim
+
+
+def _conv_flops(instr: Instr, types: Dict[str, str]) -> float:
+    ops = _operand_names(instr.rest)
+    if len(ops) < 2:
+        return 0.0
+    out_elems = _type_bytes_elems(instr.type_str)[1]
+    kern = _dims_of(types.get(ops[1], ""))
+    if not kern:
+        return 0.0
+    # kernel volume x input features: all kernel dims except output feature
+    vol = math.prod(kern)
+    out_feat = kern[-1] if len(kern) >= 1 else 1
+    return 2.0 * out_elems * max(vol // max(out_feat, 1), 1)
+
+
+def _instr_cost(instr: Instr, types: Dict[str, str]) -> Cost:
+    c = Cost()
+    if instr.op in _FREE and instr.op != "custom-call":
+        return c
+    rb, _ = _type_bytes_elems(instr.type_str)
+    if instr.op == "dynamic-slice":
+        # hardware reads only the slice, not the sliced-from array
+        c.bytes = 2.0 * rb
+        return c
+    if instr.op == "dynamic-update-slice":
+        # in-place: writes only the update region (operand 1)
+        ops = _operand_names(instr.rest)
+        ub = _type_bytes_elems(types.get(ops[1], ""))[0] if len(ops) > 1 else rb
+        c.bytes = 2.0 * ub
+        return c
+    ob = 0
+    for name in _operand_names(instr.rest):
+        ob += _type_bytes_elems(types.get(name, ""))[0]
+    c.bytes = rb + ob
+    if instr.op == "dot":
+        c.flops = _dot_flops(instr, types)
+    elif instr.op == "convolution":
+        c.flops = _conv_flops(instr, types)
+    for coll in COLLECTIVES:
+        if instr.op == coll or instr.op == coll + "-start":
+            c.coll[coll] = float(rb)
+    return c
+
+
+def analyze_hlo(hlo: str) -> Cost:
+    comps = parse_module(hlo)
+    memo: Dict[str, Cost] = {}
+
+    def comp_cost(name: str, stack=()) -> Cost:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return Cost()
+        comp = comps[name]
+        types = {i.name: i.type_str for i in comp.instrs}
+        total = Cost()
+        for instr in comp.instrs:
+            if instr.op == "while":
+                m = _TRIP_RE.search(instr.rest)
+                trips = int(m.group(1)) if m else 1
+                body = _CALLS_RE.search(instr.rest)
+                cond = _COND_RE.search(instr.rest)
+                if body:
+                    total += comp_cost(body.group(1), stack + (name,)).scaled(trips)
+                if cond:
+                    total += comp_cost(cond.group(1), stack + (name,)).scaled(trips)
+                # while op itself moves its carried tuple once per iteration
+                rb, _ = _type_bytes_elems(instr.type_str)
+                total += Cost(bytes=float(rb))
+                continue
+            if instr.op == "conditional":
+                mb = _BRANCH_RE.search(instr.rest)
+                if mb:
+                    branches = [b.strip().lstrip("%") for b in mb.group(1).split(",")]
+                    sub = [comp_cost(b, stack + (name,)) for b in branches]
+                    if sub:  # worst-case branch
+                        total += max(sub, key=lambda c: (c.flops, c.bytes))
+                continue
+            if instr.op in ("fusion", "call", "reduce", "sort", "scatter",
+                            "reduce-window", "select-and-scatter", "map",
+                            "all-reduce", "reduce-scatter"):
+                total += _instr_cost(instr, types)
+                # fused computations' dots (rare) still need pricing
+                mcalls = _CALLS_RE.search(instr.rest)
+                if mcalls and instr.op in ("fusion", "call"):
+                    inner = comp_cost(mcalls.group(1), stack + (name,))
+                    total += Cost(flops=inner.flops, coll=dict(inner.coll))
+                continue
+            total += _instr_cost(instr, types)
+        memo[name] = total
+        return total
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line.replace("ENTRY ", "").strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda n: len(comps[n].instrs)) if comps else ""
+    return comp_cost(entry)

@@ -1,0 +1,72 @@
+"""Checkpoint tests: roundtrip, async, integrity, restart resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "a": jax.random.normal(k, (17, 33)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": None,
+                   "scalar": jnp.float32(3.5)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(t, str(tmp_path), step=3)
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    restored = ckpt.restore(_tree(99), str(tmp_path), verify=True)
+    np.testing.assert_array_equal(np.asarray(t["a"]), np.asarray(restored["a"]))
+    np.testing.assert_array_equal(np.asarray(t["nested"]["b"]),
+                                  np.asarray(restored["nested"]["b"]))
+    assert restored["nested"]["c"] is None
+
+
+def test_async_save_and_latest(tmp_path):
+    t = _tree()
+    th = ckpt.save(t, str(tmp_path), step=1, asynchronous=True)
+    th.join(timeout=30)
+    ckpt.save(t, str(tmp_path), step=2)
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    assert os.path.islink(os.path.join(str(tmp_path), "latest"))
+
+
+def test_restore_shape_mismatch_fails(tmp_path):
+    ckpt.save(_tree(), str(tmp_path), step=1)
+    bad = {"a": jnp.zeros((5, 5)), "nested": {"b": jnp.zeros(10, jnp.int32),
+                                              "c": None, "scalar": jnp.float32(0)}}
+    with pytest.raises(AssertionError):
+        ckpt.restore(bad, str(tmp_path))
+
+
+def test_trainer_state_roundtrip(tmp_path):
+    """Full TrainState (tiles, opt, rng) survives save/restore and resumes."""
+    from repro.core.device import DeviceConfig
+    from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
+    from repro.core.tile import TileConfig
+    from repro.core.trainer import AnalogTrainer, TrainerConfig
+
+    def loss_fn(params, batch, rng):
+        return jnp.sum(params["w"] ** 2), {}
+
+    dev = DeviceConfig(dw_min=0.01, sigma_pm=0.3)
+    cfg = TrainerConfig(tile=TileConfig(algorithm="erider", device_p=dev, device_w=dev),
+                        digital=DigitalOptConfig(kind="sgdm"),
+                        schedule=ScheduleConfig(base_lr=0.1))
+    trainer = AnalogTrainer(loss_fn, cfg, analog_filter=lambda p, l: True)
+    state = trainer.init(jax.random.PRNGKey(0), {"w": jnp.ones((8, 8))})
+    step = trainer.jit_step(donate=False)
+    state, _ = step(state, jnp.zeros(()))
+    ckpt.save(state, str(tmp_path), step=1)
+    restored = ckpt.restore(state, str(tmp_path))
+    s2a, _ = step(state, jnp.zeros(()))
+    s2b, _ = step(restored, jnp.zeros(()))
+    np.testing.assert_allclose(np.asarray(s2a["tiles"]["w"]["W"]),
+                               np.asarray(s2b["tiles"]["w"]["W"]))

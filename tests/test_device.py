@@ -1,0 +1,56 @@
+"""Device-model unit tests: response functions, SP ground truth, sampling."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import device
+
+
+@pytest.mark.parametrize("preset", list(device.PRESETS))
+def test_presets_training_friendly(preset):
+    """Definition 2.1: positive-definite bounded responses."""
+    cfg = device.PRESETS[preset]
+    dp = device.sample_device(jax.random.PRNGKey(0), (32, 32), cfg)
+    for frac in (-0.9, -0.5, 0.0, 0.5, 0.9):
+        w = jnp.full((32, 32), frac * min(cfg.tau_min, cfg.tau_max))
+        qp, qm = device.responses(w, dp, cfg)
+        assert bool(jnp.all(qp > 0)) and bool(jnp.all(qm > 0))
+        assert bool(jnp.all(qp < 50)) and bool(jnp.all(qm < 50))
+
+
+@pytest.mark.parametrize("kind", ["softbounds", "exp"])
+def test_symmetric_point_zeroes_G(kind):
+    """Corrected eq. (110): G(w_sp) == 0 (the paper's form has a sign typo)."""
+    cfg = device.DeviceConfig(kind=kind, sigma_pm=0.4, sigma_d2d=0.2)
+    dp = device.sample_device(jax.random.PRNGKey(1), (64, 64), cfg)
+    sp = device.symmetric_point(dp, cfg)
+    _, g = device.fg(sp, dp, cfg)
+    assert float(jnp.max(jnp.abs(g))) < 1e-5
+
+
+def test_ref_offset_targets_sp():
+    """ref_mean/ref_std sampling realizes the requested SP distribution."""
+    cfg = device.DeviceConfig(sigma_pm=0.3, sigma_d2d=0.1, ref_mean=0.3, ref_std=0.2)
+    dp = device.sample_device(jax.random.PRNGKey(2), (128, 128), cfg)
+    sp = device.symmetric_point(dp, cfg)
+    assert abs(float(jnp.mean(sp)) - 0.3) < 0.05
+    assert abs(float(jnp.std(sp)) - 0.2) < 0.05
+    _, g = device.fg(sp, dp, cfg)
+    assert float(jnp.max(jnp.abs(g))) < 1e-5
+
+
+def test_hash_sampling_matches_distribution():
+    """hash-RNG device sampling has the same distribution as threefry."""
+    cfg = device.DeviceConfig(sigma_pm=0.5, sigma_d2d=0.2)
+    a = device.sample_device(jax.random.PRNGKey(3), (256, 256), cfg, method="threefry")
+    b = device.sample_device(jax.random.PRNGKey(3), (256, 256), cfg, method="hash")
+    for k in ("gamma", "rho"):
+        ma, mb = float(jnp.mean(a[k])), float(jnp.mean(b[k]))
+        sa, sb = float(jnp.std(a[k])), float(jnp.std(b[k]))
+        assert abs(ma - mb) < 0.02, (k, ma, mb)
+        assert abs(sa - sb) < 0.02, (k, sa, sb)
+
+
+def test_num_states():
+    cfg = device.DeviceConfig(dw_min=0.001)
+    assert cfg.num_states == pytest.approx(2000.0)

@@ -1,0 +1,185 @@
+"""Distribution tests: sharding rules, compressed all-reduce, fault tooling,
+plus an 8-device subprocess mini dry-run (devices can't be re-pinned inside
+this pytest process)."""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (pure logic; 1 device is fine for spec construction)
+# ---------------------------------------------------------------------------
+
+
+def test_param_spec_rules():
+    from repro.distributed.sharding import param_spec
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(1, 1)  # single device: divisibility forces replication
+    spec = param_spec("stack/body/p0/mlp/wi", (24, 896, 4864), mesh)
+    assert spec == P(None, None, None)
+
+
+def test_param_spec_divisibility_fallback():
+    """Dims not divisible by the mesh axis fall back to replication."""
+    import repro.distributed.sharding as sh
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 8}
+
+    spec = sh.param_spec("attn/wq", (30, 64), FakeMesh())
+    assert spec == P(None, "model")
+    spec2 = sh.param_spec("attn/wq", (30, 20), FakeMesh())  # 20 % 8 != 0
+    assert spec2 == P(None, None)
+    spec3 = sh.param_spec("mlp/wi", (32, 64), FakeMesh(), zero=True)
+    assert spec3 == P("data", "model")
+
+
+def test_cache_spec_long_context():
+    """batch=1 decode: sequence dim gets the data axes."""
+    import repro.distributed.sharding as sh
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    tree = {"kv": {"k": jax.ShapeDtypeStruct((1, 524288, 4, 256), jnp.bfloat16),
+                   "pos": jax.ShapeDtypeStruct((524288,), jnp.int32)}}
+    # cache_shardings needs a real Mesh for NamedSharding; use spec logic via
+    # a real host mesh when >= 2 devices, else just smoke the function
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    sh.cache_shardings(tree, mesh)  # must not raise
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_monitor_flags_slow_step():
+    from repro.distributed.fault import StragglerMonitor
+
+    m = StragglerMonitor(threshold=3.0, warmup=3)
+    for _ in range(5):
+        m.start()
+        time.sleep(0.01)
+        m.stop()
+    m.start()
+    time.sleep(0.2)
+    assert m.stop() is True
+    assert m.flagged == 1
+
+
+def test_preemption_and_restart():
+    from repro.distributed.fault import PreemptionHandler, RestartPolicy
+
+    h = PreemptionHandler(install=False)
+    assert not h.should_stop
+    h.trigger()
+    assert h.should_stop
+
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("boom")
+        return "ok"
+
+    rp = RestartPolicy(max_restarts=5, backoff_s=0.01)
+    assert rp.run(flaky) == "ok"
+    assert rp.restarts == 2
+
+
+# ---------------------------------------------------------------------------
+# subprocess multi-device tests
+# ---------------------------------------------------------------------------
+
+
+def _run_sub(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env, timeout=timeout,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_compressed_allreduce_subprocess():
+    out = _run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_host_mesh
+from repro.distributed.compression import make_compressed_grad_fn
+mesh = make_host_mesh(8, 1)
+fn = make_compressed_grad_fn(mesh, "data")
+g = jax.random.normal(jax.random.PRNGKey(0), (8, 4096))
+err = jnp.zeros_like(g)
+mean, new_err = fn(g, err)
+true_mean = jnp.mean(g, axis=0, keepdims=True)
+# every row of `mean` should equal the true mean within int8 quantization
+diff = float(jnp.max(jnp.abs(mean - true_mean)))
+scale = float(jnp.max(jnp.abs(g))) / 127
+assert diff < 3 * scale, (diff, scale)
+# error feedback accumulates the residual
+assert float(jnp.max(jnp.abs(new_err))) <= scale * 1.01
+print("COMPRESSION_OK")
+""")
+    assert "COMPRESSION_OK" in out
+
+
+def test_mini_dryrun_subprocess():
+    """8-device (2x2x2) multi-pod mini dry-run: train + decode cells lower,
+    compile, and produce roofline JSONs."""
+    out = _run_sub("""
+import os
+from repro.launch import dryrun
+from repro.launch.mesh import make_mesh
+def small_mesh(*, multi_pod=False):
+    if multi_pod:
+        return make_mesh((2,2,2), ("pod","data","model"))
+    return make_mesh((2,4), ("data","model"))
+dryrun.make_production_mesh = small_mesh
+r1 = dryrun.run_cell("qwen2-0.5b", "decode_32k", multi_pod=True, out_dir="/tmp/dry_test", tag="pytest")
+r2 = dryrun.run_cell("mamba2-2.7b", "long_500k", multi_pod=False, out_dir="/tmp/dry_test", tag="pytest")
+assert r1["status"] == "ok", r1
+assert r2["status"] == "ok", r2
+assert r1["roofline"]["hlo_flops"] > 0
+print("DRYRUN_OK")
+""", timeout=560)
+    assert "DRYRUN_OK" in out
+
+
+def test_elastic_restore_subprocess():
+    """Checkpoint saved on one mesh restores onto a different mesh shape."""
+    out = _run_sub("""
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import ckpt
+from repro.launch.mesh import make_host_mesh
+d = tempfile.mkdtemp()
+mesh1 = make_host_mesh(4, 2)
+x = jax.device_put(jnp.arange(64*32, dtype=jnp.float32).reshape(64, 32),
+                   NamedSharding(mesh1, P("data", "model")))
+ckpt.save({"x": x}, d, step=1)
+mesh2 = make_host_mesh(2, 4)   # different factorization = elastic rescale
+sh = {"x": NamedSharding(mesh2, P("data", "model"))}
+restored = ckpt.restore({"x": x}, d, shardings=sh)
+np.testing.assert_array_equal(np.asarray(restored["x"]), np.asarray(x))
+assert restored["x"].sharding.spec == P("data", "model")
+print("ELASTIC_OK")
+""")
+    assert "ELASTIC_OK" in out

@@ -1,0 +1,93 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.analog_matmul import analog_mvm_pallas
+from repro.kernels.analog_update import analog_update_pallas
+from repro.kernels.sp_filter import sp_filter_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _pad(x, bm, bn, fill=0.0):
+    m, n = x.shape
+    return jnp.pad(x, ((0, (-m) % bm), (0, (-n) % bn)), constant_values=fill)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (256, 512), (300, 700), (512, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_analog_update_matches_ref(shape, dtype):
+    ks = jax.random.split(KEY, 6)
+    m, n = shape
+    w = jax.random.uniform(ks[0], shape, jnp.float32, -0.8, 0.8).astype(dtype)
+    dw = (0.05 * jax.random.normal(ks[1], shape)).astype(dtype)
+    gamma = jnp.exp(0.1 * jax.random.normal(ks[2], shape))
+    rho = 0.3 * jax.random.normal(ks[3], shape)
+    ubits = jax.random.bits(ks[4], shape, dtype=jnp.uint32)
+    zeta = jax.random.normal(ks[5], shape)
+    kw = dict(dw_min=0.01, tau_min=1.0, tau_max=1.0, sigma_c2c=0.1, bl=10)
+    bm, bn = min(256, m), min(512, n)
+    got = analog_update_pallas(
+        _pad(w, bm, bn), _pad(dw, bm, bn), _pad(gamma, bm, bn, 1.0),
+        _pad(rho, bm, bn), _pad(ubits, bm, bn).astype(jnp.uint32),
+        _pad(zeta, bm, bn), block=(bm, bn), **kw)[:m, :n]
+    want = ref.analog_update_ref(w, dw, gamma, rho, ubits, zeta, **kw)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("mkn", [(64, 128, 96), (256, 384, 512), (128, 512, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_analog_mvm_matches_ref(mkn, dtype):
+    m, k, n = mkn
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (m, k)).astype(dtype)
+    w = (0.1 * jax.random.normal(ks[1], (k, n))).astype(dtype)
+    noise = jax.random.normal(ks[2], (m, n))
+    io = dict(inp_res=1 / 126, inp_bound=1.0, out_res=1 / 510, out_bound=12.0,
+              out_noise=0.06)
+    s = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), -1, keepdims=True), 1e-12)
+    got = analog_mvm_pallas(x, w, s, noise, blocks=(64, 128, 128), **io)
+    # compare against the oracle in f32 (bf16 inputs upcast exactly); the
+    # only legitimate difference is K-block accumulation order flipping an
+    # ADC LSB -> tolerance = 2 LSB x row scale
+    want = ref.analog_mvm_ref(x.astype(jnp.float32), w.astype(jnp.float32),
+                              noise, **io)
+    tol = float(2 * io["out_res"] * jnp.max(s))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(256, 512), (512, 1024)])
+def test_sp_filter_matches_ref(shape):
+    ks = jax.random.split(KEY, 4)
+    q = 0.1 * jax.random.normal(ks[0], shape)
+    p = 0.2 * jax.random.normal(ks[1], shape)
+    gamma = jnp.exp(0.1 * jax.random.normal(ks[2], shape))
+    rho = 0.3 * jax.random.normal(ks[3], shape)
+    got_q, got_g, got_e = sp_filter_pallas(q, p, gamma, rho, eta=0.3,
+                                           tau_min=1.0, tau_max=1.0)
+    want_q, want_g, want_e = ref.sp_filter_ref(q, p, gamma, rho, eta=0.3,
+                                               tau_min=1.0, tau_max=1.0)
+    np.testing.assert_allclose(np.asarray(got_q), np.asarray(want_q), atol=1e-6)
+    np.testing.assert_allclose(float(got_g), float(want_g), rtol=1e-5)
+    np.testing.assert_allclose(float(got_e), float(want_e), rtol=1e-5)
+
+
+def test_ops_wrappers_arbitrary_rank():
+    """ops.* accept >2-D and 1-D inputs (reshape/pad handled)."""
+    from repro.kernels import ops
+
+    w = jax.random.uniform(KEY, (3, 40, 50), jnp.float32, -0.5, 0.5)
+    out = ops.analog_update(
+        w, 0.01 * jnp.ones_like(w), jnp.ones_like(w), jnp.zeros_like(w),
+        KEY, dw_min=0.01, tau_min=1.0, tau_max=1.0, sigma_c2c=0.0)
+    assert out.shape == w.shape
+    x = jax.random.normal(KEY, (2, 5, 48))
+    wmat = jax.random.normal(KEY, (48, 32)) * 0.1
+    y = ops.analog_mvm(x, wmat, KEY, inp_res=1 / 126, inp_bound=1.0,
+                       out_res=1 / 510, out_bound=12.0, out_noise=0.0)
+    assert y.shape == (2, 5, 32)

@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests: reduced configs, fwd/train-step on CPU,
+shape checks, no NaNs, prefill/decode consistency with the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.lm import LM
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.frontend:
+        batch["frames"] = 0.1 * jax.random.normal(KEY, (B, S, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_and_grads(arch):
+    cfg = get_config(arch, smoke=True)
+    model = LM(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    logits, aux = jax.jit(model.forward)(params, batch["tokens"], batch.get("frames"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    loss, _ = model.loss(params, batch, KEY)
+    grads = jax.grad(lambda p: model.loss(p, batch, KEY)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(not bool(jnp.any(jnp.isnan(g))) for g in leaves)
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_prefill_decode_consistency(arch):
+    """Greedy decode after prefill matches the full-forward argmax at the
+    same position (cache correctness across every layer family)."""
+    cfg = get_config(arch, smoke=True)
+    model = LM(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    tokens = batch["tokens"]
+
+    cache = model.init_cache(B, S + 8, enc_len=S if cfg.is_encdec else 0)
+    feed = {"tokens": tokens}
+    if cfg.frontend:
+        feed["frames"] = batch["frames"]
+    lg_pre, cache = jax.jit(model.prefill)(params, feed, cache)
+
+    # full forward logits at the last prompt position must match prefill's
+    lg_full, _ = model.forward(params, tokens, batch.get("frames"))
+    np.testing.assert_allclose(
+        np.asarray(lg_pre[:, -1], np.float32),
+        np.asarray(lg_full[:, -1], np.float32), atol=2e-2, rtol=2e-2)
+
+    # one decode step: logits must match a full forward on the extended seq
+    nxt = jnp.argmax(lg_pre[:, -1], -1).astype(jnp.int32)[:, None]
+    lg_dec, cache = jax.jit(model.decode_step)(params, nxt, cache, jnp.int32(S))
+    ext = jnp.concatenate([tokens, nxt], axis=1)
+    frames_ext = None
+    if cfg.frontend:
+        frames_ext = jnp.concatenate(
+            [batch["frames"], jnp.zeros((B, 1, cfg.d_model), jnp.float32)], axis=1)
+    if cfg.is_encdec:
+        # enc-dec decode conditions on the *prefill* encoder output; rebuild
+        # the comparison with the same encoder input
+        lg_full2, _ = model.forward(params, ext, batch["frames"][:, :S])
+    else:
+        lg_full2, _ = model.forward(params, ext, frames_ext)
+    np.testing.assert_allclose(
+        np.asarray(lg_dec[:, -1], np.float32),
+        np.asarray(lg_full2[:, -1], np.float32), atol=3e-2, rtol=3e-2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-2.7b", "deepseek-v2-236b"])
+def test_analog_train_step_smoke(arch):
+    """One analog E-RIDER train step over a reduced LM: finite loss/metrics."""
+    from repro.core.device import DeviceConfig
+    from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
+    from repro.core.tile import TileConfig
+    from repro.core.trainer import AnalogTrainer, TrainerConfig, default_analog_filter
+
+    cfg = get_config(arch, smoke=True)
+    model = LM(cfg)
+    dev = DeviceConfig(dw_min=0.001, sigma_pm=0.3, sigma_d2d=0.1)
+    tcfg = TrainerConfig(
+        tile=TileConfig(algorithm="erider", device_p=dev, device_w=dev),
+        digital=DigitalOptConfig(kind="sgdm"),
+        schedule=ScheduleConfig(base_lr=0.05),
+        microbatch=2,
+    )
+    trainer = AnalogTrainer(model.loss, tcfg, default_analog_filter)
+    params = model.init(KEY)
+    state = trainer.init(jax.random.PRNGKey(1), params)
+    assert len(state["tiles"]) > 0, "no analog tiles selected"
+    step = trainer.jit_step()
+    state, m = step(state, _batch(cfg))
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["tile/gp_sq"]))
+    state, m2 = step(state, _batch(cfg))
+    assert int(state["step"]) == 2

@@ -1,0 +1,105 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import device
+from repro.kernels import fastrng, ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+floats = st.floats(-0.9, 0.9, allow_nan=False, width=32)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.05, 0.6), st.floats(0.0, 0.3))
+def test_symmetric_point_property(seed, sigma_pm, sigma_d2d):
+    """For any sampled device, G(symmetric_point) == 0 and the SP is inside
+    the dynamic range."""
+    cfg = device.DeviceConfig(sigma_pm=sigma_pm, sigma_d2d=sigma_d2d)
+    dp = device.sample_device(jax.random.PRNGKey(seed), (16, 16), cfg)
+    sp = device.symmetric_point(dp, cfg)
+    _, g = device.fg(sp, dp, cfg)
+    assert float(jnp.max(jnp.abs(g))) < 1e-4
+    assert float(jnp.max(jnp.abs(sp))) <= 1.0 + 1e-6
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.001, 0.2))
+def test_stochastic_rounding_unbiased(seed, frac):
+    """E[stochastic_round(x)] == x for the Bernoulli rounding in the fused
+    update (Assumption 3.4 zero-mean discretization)."""
+    key = jax.random.PRNGKey(seed)
+    dw_min = 0.01
+    dw = jnp.full((64, 64), frac * dw_min)
+    gamma = jnp.ones((64, 64))
+    rho = jnp.zeros((64, 64))
+    w = jnp.zeros((64, 64))
+    acc = 0.0
+    n = 40
+    for i in range(n):
+        ks = jax.random.split(jax.random.fold_in(key, i), 2)
+        ubits = jax.random.bits(ks[0], (64, 64), dtype=jnp.uint32)
+        zeta = jnp.zeros((64, 64))
+        out = ref.analog_update_ref(w, dw, gamma, rho, ubits, zeta,
+                                    dw_min=dw_min, tau_min=1.0, tau_max=1.0,
+                                    sigma_c2c=0.0)
+        acc += float(jnp.mean(out))
+    # with gamma=1, rho=0, F=1: E[out] = dw
+    se = dw_min / np.sqrt(n * 64 * 64)  # rounding std ~ dw_min/2
+    assert abs(acc / n - frac * dw_min) < 6 * se
+
+
+@given(st.floats(0.05, 0.95))
+def test_ema_filter_is_lowpass(eta):
+    """Lemma 3.10: |H(e^jw)|^2 is maximal at w=0, minimal at w=pi, and
+    monotonically decreasing in between."""
+    w = np.linspace(0, np.pi, 64)
+    h2 = eta ** 2 / (1 + (1 - eta) ** 2 - 2 * (1 - eta) * np.cos(w))
+    assert h2[0] == max(h2)
+    assert h2[-1] == min(h2)
+    assert np.all(np.diff(h2) <= 1e-12)
+    np.testing.assert_allclose(h2[0], 1.0, rtol=1e-6)  # unit DC gain
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_hash_rng_statistics(seed):
+    """Fused hash RNG: uniform mean/var and near-standard-normal moments."""
+    s = jnp.array([seed & 0xFFFFFFFF, (seed * 7919) & 0xFFFFFFFF], jnp.uint32)
+    u = np.asarray(fastrng.hash_uniform(s, (128, 128), 3))
+    assert abs(u.mean() - 0.5) < 0.02
+    assert abs(u.var() - 1 / 12) < 0.01
+    z = np.asarray(fastrng.hash_normal(s, (128, 128), 5))
+    assert abs(z.mean()) < 0.05
+    assert abs(z.std() - 1.0) < 0.05
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.01, 0.3))
+def test_analog_update_lipschitz(seed, mag):
+    """Lemma A.2: the analog increment is q_max-Lipschitz in dw."""
+    cfg = device.DeviceConfig(sigma_pm=0.3, sigma_d2d=0.1)
+    key = jax.random.PRNGKey(seed)
+    dp = device.sample_device(key, (32, 32), cfg)
+    w = jax.random.uniform(key, (32, 32), jnp.float32, -0.5, 0.5)
+    qp, qm = device.responses(w, dp, cfg)
+    q_max = float(jnp.max(jnp.maximum(qp, qm)))
+    dw1 = mag * jax.random.normal(jax.random.fold_in(key, 1), (32, 32))
+    dw2 = mag * jax.random.normal(jax.random.fold_in(key, 2), (32, 32))
+
+    def incr(dw):
+        f, g = device.fg(w, dp, cfg)
+        return dw * f - jnp.abs(dw) * g
+
+    lhs = float(jnp.linalg.norm(incr(dw1) - incr(dw2)))
+    rhs = q_max * float(jnp.linalg.norm(dw1 - dw2))
+    assert lhs <= rhs * (1 + 1e-5)
+
+
+@given(st.integers(2, 64), st.integers(2, 64))
+def test_procedural_dataset_shapes(h, n):
+    from repro.data import procedural_images
+
+    x, y = procedural_images(n, n_classes=4, size=max(h, 8), seed=1)
+    assert x.shape == (n, max(h, 8), max(h, 8), 1)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)).issubset(set(range(4)))

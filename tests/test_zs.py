@@ -1,0 +1,42 @@
+"""Zero-shifting (Algorithm 1) convergence tests against Thm 2.2 / C.2."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import device, zs
+
+
+def _setup(dw_min=0.01, key=0):
+    cfg = device.DeviceConfig(dw_min=dw_min, sigma_pm=0.4, sigma_d2d=0.1)
+    dp = device.sample_device(jax.random.PRNGKey(key), (48, 48), cfg)
+    return cfg, dp, device.symmetric_point(dp, cfg)
+
+
+@pytest.mark.parametrize("scheme", ["stochastic", "cyclic"])
+def test_zs_converges(scheme):
+    cfg, dp, sp = _setup()
+    w = zs.zs_estimate(jax.random.PRNGKey(1), jnp.zeros((48, 48)), dp, cfg,
+                       2000, scheme=scheme)
+    rmse = float(jnp.sqrt(jnp.mean((w - sp) ** 2)))
+    assert rmse < 0.1 * float(jnp.std(sp)) + 0.02, rmse
+
+
+def test_zs_error_floor_scales_with_dwmin():
+    """Thm 2.2: the achievable error floor is Theta(dw_min)."""
+    floors = []
+    for dw_min in (0.04, 0.01):
+        cfg, dp, sp = _setup(dw_min)
+        w = zs.zs_estimate(jax.random.PRNGKey(2), jnp.zeros((48, 48)), dp, cfg,
+                           int(40 / dw_min))
+        floors.append(float(jnp.mean(jnp.abs(w - sp))))
+    assert floors[1] < floors[0], floors  # finer device -> lower floor
+
+
+def test_zs_trace_g_decreases():
+    cfg, dp, sp = _setup()
+    _, trace = zs.zs_estimate_with_trace(jax.random.PRNGKey(3),
+                                         jnp.zeros((48, 48)), dp, cfg, 1500)
+    g = trace["g_sq"]
+    assert float(g[-1]) < 0.2 * float(g[0])
+    n = zs.pulses_to_target(g, float(g[0]) * 0.5)
+    assert 0 < n <= 1500
