@@ -11,7 +11,8 @@ from __future__ import annotations
 import argparse
 import time
 
-BENCHES = ("fig1", "fig2", "table12", "fig4", "ablations", "roofline")
+BENCHES = ("fig1", "fig2", "table12", "fig4", "ablations", "roofline",
+           "tile_engine")
 
 
 def main() -> None:
@@ -47,6 +48,9 @@ def main() -> None:
     if "roofline" in only:
         from . import roofline_report
         emit(roofline_report.run(quick))
+    if "tile_engine" in only:
+        from . import bench_tile_engine
+        emit(bench_tile_engine.run(quick))
 
     print(f"total,{(time.time() - t_start) * 1e6:.0f},benchmarks_done", flush=True)
 

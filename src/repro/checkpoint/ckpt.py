@@ -24,13 +24,15 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from repro.core.paths import path_str
+
 _CHUNK_BYTES = 512 * 1024 * 1024
 
 
 def _flatten(tree) -> Dict[str, Any]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     return {
-        jax.tree_util.keystr(kp, simple=True, separator="/"): leaf for kp, leaf in flat
+        path_str(kp): leaf for kp, leaf in flat
     }
 
 
@@ -110,12 +112,54 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _legacy_group_members(manifest, shape, dtype_name):
+    """Member weight-paths of one (shape, dtype) tile group in a legacy
+    per-tile checkpoint — sorted, which is exactly the stacking order
+    ``repro.core.tile.group_tiles`` uses."""
+    import re
+
+    members = []
+    for key, meta in manifest["arrays"].items():
+        m = re.match(r"^tiles/(.+)/W$", key)
+        if m and tuple(meta["shape"]) == tuple(shape) \
+                and meta["dtype"] == dtype_name:
+            members.append(m.group(1))
+    return sorted(members)
+
+
+def _legacy_grouped_arr(key, manifest, load_arr):
+    """Assemble a grouped-layout leaf ``tiles/<group>/<slot>`` by stacking
+    the matching per-tile leaves of a legacy (pre-TileBank) checkpoint.
+    Returns None when ``key`` is not a grouped tile leaf."""
+    import re
+
+    from repro.core.tile import parse_group_name
+
+    m = re.match(r"^tiles/([^/]+)/(.+)$", key)
+    if not m:
+        return None
+    parsed = parse_group_name(m.group(1))
+    if parsed is None:
+        return None
+    shape, dtype_name = parsed
+    members = _legacy_group_members(manifest, shape, dtype_name)
+    if not members:
+        return None
+    slot = m.group(2)
+    return np.stack([load_arr(f"tiles/{p}/{slot}") for p in members])
+
+
 def restore(template, directory: str, step: Optional[int] = None, *,
             shardings=None, verify: bool = False):
     """Load arrays into the structure of ``template``.
 
     shardings: optional matching pytree of NamedShardings (elastic restore —
     the stored full arrays are device_put with the *new* mesh's shardings).
+
+    Grouped tile state (``tiles/<group>/...`` with a leading stack axis)
+    restores from either layout: same-layout checkpoints load directly, and
+    legacy per-tile checkpoints are upgraded on the fly by stacking their
+    member tiles in group order.
     """
     if step is None:
         step = latest_step(directory)
@@ -144,11 +188,15 @@ def restore(template, directory: str, step: Optional[int] = None, *,
             shardings, is_leaf=lambda x: x is None)[0]]
     out = []
     for i, (kp, leaf) in enumerate(flat):
-        key = jax.tree_util.keystr(kp, simple=True, separator="/")
+        key = path_str(kp)
         if leaf is None:
             out.append(None)
             continue
-        arr = load_arr(key)
+        if key in manifest["arrays"]:
+            arr = load_arr(key)
+        else:
+            arr = _legacy_grouped_arr(key, manifest, load_arr)
+            assert arr is not None, f"checkpoint missing leaf {key}"
         expect = tuple(leaf.shape)
         assert tuple(arr.shape) == expect, (key, arr.shape, expect)
         if shard_flat is not None and shard_flat[i] is not None:

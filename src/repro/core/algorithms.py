@@ -87,6 +87,12 @@ def _grad_to_analog(st: TileState, grad, cfg: TileConfig):
     With grad_norm='absmean' the gradient is rescaled so a fast-LR of 1.0
     delivers ~1 pulse per element per step regardless of device granularity
     (the AIHWKit auto-granularity mechanism the paper's configs rely on).
+
+    The mean-|g| here must be *per tile*: the batched tile engine drives this
+    through jax.vmap over the TileBank stack axis, so `jnp.mean` sees one
+    tile's slice, never the whole stack. Callers operating on stacked arrays
+    directly must vmap — a raw call would normalize across the group and
+    couple tiles of different gradient magnitude.
     """
     g = grad.astype(jnp.float32) * st["scale"]
     if cfg.grad_norm == "absmean":

@@ -20,6 +20,7 @@ update is element-local.
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Any, Dict, Optional
 
 import jax
@@ -183,3 +184,113 @@ def expected_pulses(dw, dw_min: float, bl: int = 0):
     if bl:
         n = jnp.minimum(n, float(bl))
     return jnp.sum(n)
+
+
+# ---------------------------------------------------------------------------
+# Batched tile engine: shape-grouped stacks of tiles
+# ---------------------------------------------------------------------------
+
+
+def group_name(shape, dtype) -> str:
+    """Stable group key for all tiles of one (shape, dtype): "g64x64_float32".
+
+    The name is parseable (see ``parse_group_name``) so a checkpoint written
+    in the grouped layout can be matched back against legacy per-tile keys.
+    """
+    dims = "x".join(str(int(d)) for d in shape)
+    return f"g{dims}_{jnp.dtype(dtype).name}"
+
+
+def parse_group_name(name: str) -> Optional[tuple]:
+    """Inverse of ``group_name``: "g64x64_float32" -> ((64, 64), "float32").
+    Returns None if ``name`` is not a group key."""
+    m = re.match(r"^g(\d+(?:x\d+)*)_([A-Za-z0-9_]+)$", name)
+    if not m:
+        return None
+    shape = tuple(int(d) for d in m.group(1).split("x"))
+    return shape, m.group(2)
+
+
+class TileBank:
+    """All analog tiles of a trainer, stacked by (shape, dtype) group.
+
+    ``groups`` maps group key -> TileState whose every array leaf carries a
+    new leading *stack* axis of length = number of member tiles; per-tile
+    scalars (t, c, scale, prog) become (n,) vectors and per-tile seeds (2,)
+    become (n, 2). ``index`` is the static path layout: a tuple of
+    (group_key, (member-path, ...)) pairs, members sorted, groups sorted by
+    key — it lives in the pytree *treedef* (aux data), so it is a hashable
+    jit-static constant and the jitted train_step can drive one vmapped
+    update per group instead of one update per tile.
+
+    The stack axis is element-local like everything else in a tile, which is
+    what makes it the natural ZeRO/scan sharding axis (DESIGN.md §3).
+    """
+
+    def __init__(self, groups: Dict[str, "TileState"], index):
+        self.groups = dict(groups)
+        self.index = tuple((g, tuple(paths)) for g, paths in index)
+        self._where = {p: (g, i) for g, paths in self.index
+                       for i, p in enumerate(paths)}
+
+    # -- mapping interface over member tiles --------------------------------
+    def __len__(self) -> int:
+        return len(self._where)
+
+    def __contains__(self, path) -> bool:
+        return path in self._where or path in self.groups
+
+    def __iter__(self):
+        return iter(self._where)
+
+    def paths(self):
+        return tuple(self._where)
+
+    def __getitem__(self, path) -> "TileState":
+        """Per-tile view (sliced out of its stack) or a whole stacked group."""
+        if path in self.groups:
+            return self.groups[path]
+        g, i = self._where[path]
+        return jax.tree.map(lambda leaf: leaf[i], self.groups[g])
+
+    def __repr__(self):
+        return (f"TileBank({len(self._where)} tiles in {len(self.groups)} "
+                f"groups: {[g for g, _ in self.index]})")
+
+
+def _tilebank_flatten(bank: TileBank):
+    names = tuple(g for g, _ in bank.index)
+    return (tuple((jax.tree_util.DictKey(g), bank.groups[g]) for g in names),
+            bank.index)
+
+
+jax.tree_util.register_pytree_with_keys(
+    TileBank,
+    _tilebank_flatten,
+    lambda index, groups: TileBank(
+        dict(zip((g for g, _ in index), groups)), index),
+)
+
+
+def group_tiles(shapes: Dict[str, tuple], cfg: TileConfig):
+    """Static grouping: {path: weight shape} -> TileBank index layout."""
+    by_group: Dict[str, list] = {}
+    for p in sorted(shapes):
+        by_group.setdefault(group_name(shapes[p], cfg.state_dtype), []).append(p)
+    return tuple((g, tuple(by_group[g])) for g in sorted(by_group))
+
+
+def stack_tiles(per_tile: Dict[str, "TileState"], index) -> TileBank:
+    """Stack per-tile states along a new leading axis, per group."""
+    groups = {}
+    for g, paths in index:
+        groups[g] = jax.tree.map(
+            lambda *leaves: jnp.stack(leaves), *(per_tile[p] for p in paths))
+    return TileBank(groups, index)
+
+
+def abstract_tile_group(shape, n: int, cfg: TileConfig) -> "TileState":
+    """ShapeDtypeStruct skeleton of an ``n``-tile stacked group."""
+    st = abstract_tile(shape, cfg)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), st)

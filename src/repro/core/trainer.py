@@ -4,10 +4,16 @@ Given a loss function over a parameter pytree and a predicate selecting
 which leaves live on analog tiles, builds pure jit-able ``init`` /
 ``train_step`` functions:
 
-  1. ``begin_step`` phase per tile (chopper draw / Q-tilde sync, Alg.3 l.3-6)
+  1. ``begin_step`` phase (chopper draw / Q-tilde sync, Alg.3 l.3-6)
   2. forward/backward on the *effective* parameter tree
      (analog leaves -> scale * W̄, paper's mixed weight)
   3. digital leaves -> SGD/Adam; analog leaves -> pulse-based tile update
+
+Tiles are stored shape-grouped (TileBank): all tiles of one (shape, dtype)
+stack along a leading axis and phases 1/3b run as ONE vmapped instance per
+group — the jitted train_step contains O(distinct shapes) copies of the
+pulse-update graph, not O(layers). ``TrainerConfig(engine="looped")`` keeps
+the legacy per-tile dict layout and Python loop as a reference baseline.
 
 The same train_step is used single-host and under GSPMD (the dry-run lowers
 it with sharded in/out specs; gradients reduce over the data axes before
@@ -23,7 +29,9 @@ import jax.numpy as jnp
 
 from . import algorithms as alg
 from .digital_opt import DigitalOptConfig, ScheduleConfig, apply_opt, init_opt, lr_at
-from .tile import TileConfig, TileState, abstract_tile, init_tile
+from .paths import path_str
+from .tile import (TileBank, TileConfig, abstract_tile, abstract_tile_group,
+                   group_tiles, init_tile, stack_tiles)
 
 PathPredicate = Callable[[str, Any], bool]
 LossFn = Callable[[Any, Any, jax.Array], Tuple[jax.Array, Dict[str, jax.Array]]]
@@ -40,6 +48,16 @@ class TrainerConfig:
     # full-batch gradient, as in the single-device math).
     microbatch: int = 1
     accum_dtype: Any = jnp.float32
+    # Tile engine. "grouped" (default) stacks tiles by (shape, dtype) into a
+    # TileBank and runs one vmapped begin_step/update per *group*, so the
+    # jitted train_step contains O(distinct shapes) copies of the pulse-update
+    # graph instead of O(layers). "looped" keeps the legacy per-tile dict
+    # layout and Python loop (reference/benchmark baseline; also the layout
+    # of pre-TileBank checkpoints).
+    engine: str = "grouped"
+
+    def __post_init__(self):
+        assert self.engine in ("grouped", "looped"), self.engine
 
 
 def default_analog_filter(path: str, leaf) -> bool:
@@ -49,10 +67,6 @@ def default_analog_filter(path: str, leaf) -> bool:
         return False
     lowered = path.lower()
     return not any(s in lowered for s in ("embed", "vocab", "lm_head", "pos"))
-
-
-def path_str(kp) -> str:
-    return jax.tree_util.keystr(kp, simple=True, separator="/")
 
 
 def partition_params(params, analog_filter: PathPredicate):
@@ -72,23 +86,39 @@ def partition_params(params, analog_filter: PathPredicate):
     return digital, analog
 
 
-def merge_effective(digital, tiles: Dict[str, TileState], tcfg: TileConfig):
+def effective_weights(tiles, tcfg: TileConfig) -> Dict[str, jax.Array]:
+    """{path: model-space effective weight} for a TileBank (one vmapped
+    effective_weight per shape group) or a legacy per-tile dict."""
+    if isinstance(tiles, TileBank):
+        out = {}
+        for g, paths in tiles.index:
+            eff = jax.vmap(lambda ts: alg.effective_weight(ts, tcfg))(
+                tiles.groups[g])
+            for i, p in enumerate(paths):
+                out[p] = eff[i]
+        return out
+    return {p: alg.effective_weight(ts, tcfg) for p, ts in tiles.items()}
+
+
+def merge_effective(digital, tiles, tcfg: TileConfig):
     """Rebuild the full parameter tree with analog leaves replaced by
-    their effective (model-space) weights."""
+    their effective (model-space) weights. ``tiles`` is a TileBank or a
+    legacy {path: TileState} dict."""
+    eff = effective_weights(tiles, tcfg)
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         digital, is_leaf=lambda x: x is None
     )
     out = []
     for kp, leaf in flat:
         p = path_str(kp)
-        if leaf is None and p in tiles:
-            out.append(alg.effective_weight(tiles[p], tcfg))
+        if leaf is None and p in eff:
+            out.append(eff[p])
         else:
             out.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def extract_analog_grads(grads, tiles: Dict[str, TileState]):
+def extract_analog_grads(grads, tiles):
     flat, _ = jax.tree_util.tree_flatten_with_path(grads)
     agrads = {}
     for kp, leaf in flat:
@@ -98,7 +128,7 @@ def extract_analog_grads(grads, tiles: Dict[str, TileState]):
     return agrads
 
 
-def mask_digital_grads(grads, tiles: Dict[str, TileState]):
+def mask_digital_grads(grads, tiles):
     flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
     out = []
     for kp, leaf in flat:
@@ -132,10 +162,16 @@ class AnalogTrainer:
     # -- state ------------------------------------------------------------
     def init(self, key, params, sp_estimates: Optional[Dict[str, Any]] = None) -> TrainState:
         digital, analog = partition_params(params, self.analog_filter)
-        tiles = {}
+        per_tile = {}
         for i, (p, w0) in enumerate(sorted(analog.items())):
             sp = (sp_estimates or {}).get(p)
-            tiles[p] = init_tile(jax.random.fold_in(key, i), w0, self.cfg.tile, sp)
+            per_tile[p] = init_tile(jax.random.fold_in(key, i), w0, self.cfg.tile, sp)
+        if self.cfg.engine == "grouped":
+            index = group_tiles({p: w.shape for p, w in analog.items()},
+                                self.cfg.tile)
+            tiles = stack_tiles(per_tile, index)
+        else:
+            tiles = per_tile
         return TrainState(
             step=jnp.zeros((), jnp.int32),
             key=jax.random.key_data(key).astype(jnp.uint32),
@@ -147,7 +183,18 @@ class AnalogTrainer:
     def abstract_state(self, params_shapes) -> TrainState:
         """ShapeDtypeStruct state (dry-run lowering; no allocation)."""
         digital, analog = partition_params(params_shapes, self.analog_filter)
-        tiles = {p: abstract_tile(w.shape, self.cfg.tile) for p, w in sorted(analog.items())}
+        if self.cfg.engine == "grouped":
+            index = group_tiles({p: w.shape for p, w in analog.items()},
+                                self.cfg.tile)
+            tiles = TileBank(
+                {g: abstract_tile_group(analog[paths[0]].shape, len(paths),
+                                        self.cfg.tile)
+                 for g, paths in index},
+                index,
+            )
+        else:
+            tiles = {p: abstract_tile(w.shape, self.cfg.tile)
+                     for p, w in sorted(analog.items())}
         opt = init_opt(
             jax.tree.map(lambda s: None if s is None else jax.ShapeDtypeStruct(s.shape, jnp.float32),
                          digital, is_leaf=lambda x: x is None),
@@ -166,12 +213,25 @@ class AnalogTrainer:
         tcfg = self.cfg.tile
         key = jax.random.wrap_key_data(state["key"])
         key, k_begin, k_model, k_upd = jax.random.split(key, 4)
+        grouped = isinstance(state["tiles"], TileBank)
 
-        # phase 1: chopper / Q-tilde sync
-        tiles = {
-            p: alg.begin_step(ts, jax.random.fold_in(k_begin, i), tcfg)
-            for i, (p, ts) in enumerate(sorted(state["tiles"].items()))
-        }
+        # phase 1: chopper / Q-tilde sync — one vmapped begin_step per shape
+        # group (grouped engine) or one per tile (legacy looped engine)
+        if grouped:
+            bank: TileBank = state["tiles"]
+            begun = {}
+            for gi, (g, paths) in enumerate(bank.index):
+                keys = jax.random.split(
+                    jax.random.fold_in(k_begin, gi), len(paths))
+                begun[g] = jax.vmap(
+                    lambda ts, k: alg.begin_step(ts, k, tcfg))(
+                        bank.groups[g], keys)
+            tiles = TileBank(begun, bank.index)
+        else:
+            tiles = {
+                p: alg.begin_step(ts, jax.random.fold_in(k_begin, i), tcfg)
+                for i, (p, ts) in enumerate(sorted(state["tiles"].items()))
+            }
 
         # phase 2: fwd/bwd on effective weights (with grad accumulation)
         eff = merge_effective(state["params"], tiles, tcfg)
@@ -220,20 +280,36 @@ class AnalogTrainer:
             state["params"], dgrads, state["opt"], state["step"], lr, self.cfg.digital
         )
 
-        # phase 3b: analog branch (pulse updates)
+        # phase 3b: analog branch (pulse updates) — grouped engine runs ONE
+        # vmapped pulse-update per shape group over the stacked state, with a
+        # single split-once-per-group key; looped engine is the legacy
+        # O(tiles) unrolled reference.
         agrads = extract_analog_grads(grads, tiles)
-        tile_metrics = []
-        new_tiles = {}
-        for i, (p, ts) in enumerate(sorted(tiles.items())):
-            ts2, m = alg.update(ts, agrads[p], jax.random.fold_in(k_upd, i), tcfg, lr)
-            new_tiles[p] = ts2
-            tile_metrics.append(m)
+        tile_metrics = []  # per-group (n,)-vector metrics / per-tile scalars
+        if grouped:
+            updated = {}
+            for gi, (g, paths) in enumerate(tiles.index):
+                gg = jnp.stack([agrads[p] for p in paths])
+                keys = jax.random.split(
+                    jax.random.fold_in(k_upd, gi), len(paths))
+                updated[g], gm = jax.vmap(
+                    lambda ts, grd, k: alg.update(ts, grd, k, tcfg, lr))(
+                        tiles.groups[g], gg, keys)
+                tile_metrics.append(gm)
+            new_tiles = TileBank(updated, tiles.index)
+        else:
+            new_tiles = {}
+            for i, (p, ts) in enumerate(sorted(tiles.items())):
+                ts2, m = alg.update(ts, agrads[p], jax.random.fold_in(k_upd, i), tcfg, lr)
+                new_tiles[p] = ts2
+                tile_metrics.append(m)
 
         metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm, **aux}
         if tile_metrics:
             keys = tile_metrics[0].keys()
             for k in keys:
-                vals = jnp.stack([m[k] for m in tile_metrics if k in m])
+                vals = jnp.concatenate(
+                    [jnp.atleast_1d(m[k]) for m in tile_metrics if k in m])
                 metrics[f"tile/{k}"] = jnp.sum(vals) if k in ("pulses", "prog_events") else jnp.mean(vals)
 
         new_state = TrainState(

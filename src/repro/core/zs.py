@@ -7,7 +7,7 @@ benchmark ``benchmarks/fig1_zs.py`` sweeps N and dw_min against these rates.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,15 +24,28 @@ def zs_estimate(
     n_pulses: int,
     *,
     scheme: str = "stochastic",
+    tail_average: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Run Algorithm 1 for ``n_pulses`` pulses, return W_N (the SP estimate).
+    """Run Algorithm 1 for ``n_pulses`` pulses and return the SP estimate.
 
     scheme: 'stochastic' draws eps ~ U{-dw_min, +dw_min} i.i.d. per element;
             'cyclic' alternates +dw_min, -dw_min (paper eq. 31).
+
+    tail_average: return the average of the last half of the iterates instead
+    of W_N. Defaults to True for the stochastic scheme: Thm 2.2 bounds the
+    *average* iterate, while the stochastic last iterate keeps a Theta(dw_min)
+    jitter floor (each pulse moves a full +-dw_min step), so averaging the
+    stationary tail recovers the theorem's rate. The cyclic scheme's +/- pairs
+    cancel within one period, so its last iterate already sits on the floor
+    (defaults to False).
     """
+    if tail_average is None:
+        tail_average = scheme == "stochastic"
+    tail_start = n_pulses // 2 if tail_average else max(n_pulses - 1, 0)
+    tail_len = max(n_pulses - tail_start, 1)
 
     def body(carry, n):
-        w, k = carry
+        w, acc, k = carry
         k, ke, kc = jax.random.split(k, 3)
         if scheme == "stochastic":
             sign = jnp.where(
@@ -44,10 +57,14 @@ def zs_estimate(
             raise ValueError(scheme)
         eps = sign * cfg.dw_min
         w = zs_step(w, eps, dp, cfg, kc)
-        return (w, k), None
+        acc = acc + jnp.where(n >= tail_start, w.astype(jnp.float32), 0.0)
+        return (w, acc, k), None
 
-    (w, _), _ = jax.lax.scan(body, (w0, key), jnp.arange(n_pulses))
-    return w
+    acc0 = jnp.zeros_like(w0, jnp.float32)
+    (w, acc, _), _ = jax.lax.scan(body, (w0, acc0, key), jnp.arange(n_pulses))
+    if n_pulses == 0:
+        return w
+    return (acc / tail_len).astype(w.dtype)
 
 
 def zs_estimate_with_trace(

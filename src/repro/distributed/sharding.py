@@ -25,6 +25,8 @@ from typing import Any, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.paths import path_str
+
 
 def mesh_axis_sizes(mesh: Mesh):
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -103,20 +105,70 @@ def param_spec(path: str, shape, mesh: Mesh, zero: bool = False) -> P:
                     0 if zero else None)
 
 
+_TILE_SLOTS = r"(W|P|Qd|Qt|H|dev_p/(gamma|rho)|dev_w/(gamma|rho))"
+
+
+def grouped_tile_spec(member_paths, shape, mesh: Mesh,
+                      zero: bool = True) -> P:
+    """PartitionSpec for a stacked tile-group array (n, *member-shape).
+
+    Member dims inherit the owning weights' model-axis spec — but only when
+    every member of the group agrees: tiles are grouped by (shape, dtype),
+    so one stack can mix rules (attn/wq wants (None, "M") while same-shape
+    attn/wo wants ("M", None)); a disagreeing group replicates its member
+    dims rather than silently transposing half its tiles' layout. The
+    leading stack axis is the natural ZeRO/scan axis (element-local updates,
+    DESIGN.md §3) and takes the data axes when the group size divides,
+    falling back to the first divisible replicated member dim otherwise.
+    """
+    if isinstance(member_paths, str):
+        member_paths = (member_paths,)
+    data_axes, dsize, model_ax, msize = mesh_axis_sizes(mesh)
+    specs = {param_spec(p, shape[1:], mesh) for p in member_paths}
+    inner = specs.pop() if len(specs) == 1 else P(*([None] * (len(shape) - 1)))
+    spec = [None] + list(inner) + [None] * (len(shape) - 1 - len(inner))
+    if zero and data_axes and dsize > 1:
+        daxes = data_axes if len(data_axes) > 1 else data_axes[0]
+        if shape[0] % dsize == 0 and shape[0] >= dsize:
+            spec[0] = daxes
+        else:
+            for dim in range(1, len(shape)):
+                if spec[dim] is None and shape[dim] % dsize == 0 \
+                        and shape[dim] >= dsize:
+                    spec[dim] = daxes
+                    break
+    return P(*spec)
+
+
 def state_shardings(state_tree, mesh: Mesh, zero_states: bool = True):
     """NamedShardings for an AnalogTrainer TrainState (abstract or concrete).
 
     Tile/optimizer arrays inherit the owning weight's spec plus ZeRO over the
-    data axes; scalars replicate.
+    data axes; scalars replicate. Grouped (TileBank) states put the ZeRO axis
+    on the leading stack dim (see grouped_tile_spec); legacy per-tile states
+    keep the seed behaviour.
     """
+    from repro.core.tile import TileBank
+
+    bank = state_tree.get("tiles") if hasattr(state_tree, "get") else None
+    members = dict(bank.index) if isinstance(bank, TileBank) else {}
 
     def spec_of(kp, leaf):
-        path = jax.tree_util.keystr(kp, simple=True, separator="/")
+        path = path_str(kp)
         shape = leaf.shape
         if len(shape) == 0:
             return P()
-        # tile state arrays live under tiles/<weight-path>/<slot>
-        m = re.match(r"tiles/(.*)/(W|P|Qd|Qt|H|dev_p/(gamma|rho)|dev_w/(gamma|rho))$", path)
+        # grouped layout: tiles/<group>/<slot>, leading stack axis
+        m = re.match(rf"tiles/([^/]+)/{_TILE_SLOTS}$", path)
+        if m and m.group(1) in members:
+            return grouped_tile_spec(members[m.group(1)], shape, mesh,
+                                     zero=zero_states)
+        # grouped per-tile scalars stacked to (n,) / seeds (n, 2): replicate
+        m = re.match(r"tiles/([^/]+)/(t|c|scale|prog|seed_w|seed_p)$", path)
+        if m and m.group(1) in members:
+            return P(*([None] * len(shape)))
+        # legacy per-tile layout: tiles/<weight-path>/<slot>
+        m = re.match(rf"tiles/(.*)/{_TILE_SLOTS}$", path)
         if m:
             return param_spec(m.group(1), shape, mesh, zero=zero_states)
         if path.startswith("opt/"):
@@ -135,7 +187,7 @@ def params_shardings(params_tree, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(
         lambda kp, leaf: NamedSharding(
             mesh,
-            param_spec(jax.tree_util.keystr(kp, simple=True, separator="/"),
+            param_spec(path_str(kp),
                        leaf.shape, mesh),
         ),
         params_tree,
@@ -173,7 +225,7 @@ def cache_shardings(cache_tree, mesh: Mesh):
     daxes = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
 
     def spec_of(kp, leaf):
-        path = jax.tree_util.keystr(kp, simple=True, separator="/")
+        path = path_str(kp)
         shape = leaf.shape
         name = path.split("/")[-1]
         spec: list = [None] * len(shape)

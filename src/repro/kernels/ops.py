@@ -117,9 +117,14 @@ def analog_update(
     dw2 = _pad2d(_view2d(dw), bm, bn)
     g2 = _pad2d(_view2d(gamma), bm, bn, fill=1.0)
     r2 = _pad2d(_view2d(rho), bm, bn)
-    ubits, zeta = make_noise(w2.shape)
+    # Draw noise at the ORIGINAL shape so ref and pallas consume identical
+    # random bits for any (possibly non-block-multiple) tile, then pad into
+    # the kernel grid: ubits=2^31 / zeta=0 keep the dw=0 padding inert.
+    ubits, zeta = make_noise(shape)
+    u2 = _pad2d(_view2d(ubits), bm, bn, fill=jnp.uint32(1 << 31))
+    z2 = _pad2d(_view2d(zeta), bm, bn)
     out = analog_update_pallas(
-        w2, dw2, g2, r2, ubits, zeta, interpret=interpret, **kwargs
+        w2, dw2, g2, r2, u2, z2, interpret=interpret, **kwargs
     )
     return out[:m, :n].reshape(shape)
 
@@ -162,7 +167,10 @@ def analog_mvm(
         xp = _pad2d(x2, bm, bk)
         wp = _pad2d(w, bk, bn)
         sp = _pad2d(s, bm, 1, fill=1.0)
-        noise = jax.random.normal(key, (xp.shape[0], wp.shape[1]), dtype=jnp.float32)
+        # noise at the original output shape (bit-identical to the ref path),
+        # zero-padded into the kernel grid
+        noise = _pad2d(jax.random.normal(key, (m, n), dtype=jnp.float32),
+                       xp.shape[0], wp.shape[1])
         out = analog_mvm_pallas(xp, wp, sp, noise, interpret=interpret, **kwargs)
         out = out[:m, :n].astype(x.dtype)
     else:

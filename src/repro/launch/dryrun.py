@@ -70,7 +70,8 @@ def make_tile_cfg(algorithm: str = "erider") -> TileConfig:
     )
 
 
-def make_trainer(model: LM, arch: str, algorithm: str, dsize: int) -> AnalogTrainer:
+def make_trainer(model: LM, arch: str, algorithm: str, dsize: int,
+                 tile_engine: str = "grouped") -> AnalogTrainer:
     mb = MICROBATCH.get(arch, 2)
     mb = max(1, min(mb, 256 // dsize))
     tcfg = TrainerConfig(
@@ -79,6 +80,7 @@ def make_trainer(model: LM, arch: str, algorithm: str, dsize: int) -> AnalogTrai
         schedule=ScheduleConfig(kind="cosine", base_lr=0.1, total_steps=10000),
         microbatch=mb,
         accum_dtype=jnp.bfloat16,
+        engine=tile_engine,
     )
     return AnalogTrainer(model.loss, tcfg, default_analog_filter)
 
@@ -91,7 +93,7 @@ def make_trainer(model: LM, arch: str, algorithm: str, dsize: int) -> AnalogTrai
 #   attn_chunk / microbatch / moe_group: overrides
 DEFAULT_OPTS = dict(zero_tiles=True, moe_impl=None, remat=None,
                     attn_chunk=None, microbatch=None, moe_group=None,
-                    mla_absorbed=None)
+                    mla_absorbed=None, tile_engine="grouped")
 
 
 def build_cell(arch: str, shape_name: str, mesh, *, algorithm: str = "erider",
@@ -122,7 +124,8 @@ def build_cell(arch: str, shape_name: str, mesh, *, algorithm: str = "erider",
     mflops = analysis.model_flops_for(cfg, spec)
 
     if spec.kind == "train":
-        trainer = make_trainer(model, arch, algorithm, dsize)
+        trainer = make_trainer(model, arch, algorithm, dsize,
+                               tile_engine=o["tile_engine"])
         if o["microbatch"] is not None:
             trainer.cfg = _dc.replace(trainer.cfg, microbatch=o["microbatch"])
         astate = trainer.abstract_state(aparams)
@@ -250,12 +253,16 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--microbatch", type=int, default=None)
     ap.add_argument("--moe-group", type=int, default=None)
     ap.add_argument("--mla-absorbed", action="store_true")
+    ap.add_argument("--tile-engine", default="grouped",
+                    choices=["grouped", "looped"],
+                    help="looped = legacy per-tile update loop (baseline)")
     args = ap.parse_args(argv)
     opts = dict(zero_tiles=not args.no_zero_tiles, moe_impl=args.moe_impl,
                 remat=False if args.no_remat else None,
                 attn_chunk=args.attn_chunk, microbatch=args.microbatch,
                 moe_group=args.moe_group,
-                mla_absorbed=True if args.mla_absorbed else None)
+                mla_absorbed=True if args.mla_absorbed else None,
+                tile_engine=args.tile_engine)
 
     archs = [args.arch] if args.arch else sorted(ARCHS)
     shapes = [args.shape] if args.shape else sorted(SHAPES)

@@ -7,25 +7,33 @@ device count via XLA_FLAGS before any jax initialization.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+
+    def _mesh(shape, axes):
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(AxisType.Auto,) * len(axes))
+except ImportError:  # jax 0.4.x: all axes are implicitly Auto
+
+    def _mesh(shape, axes):
+        return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips single-pod, or 2x16x16 = 512 chips across 2 pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Elastic variant: any (pods, data, model) factorization of the fleet."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU smoke)."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _mesh((data, model), ("data", "model"))

@@ -160,10 +160,13 @@ def _operand_names(rest: str) -> List[str]:
             token += ch
         else:
             token += ch
+    # Operands may be bare names ("%name") or carry inline types
+    # ("f32[64,128]{1,0} %name", older XLA text form); shapes contain commas,
+    # so extract the %name token from each comma-split fragment.
     for part in token.split(","):
-        part = part.strip()
-        if part.startswith("%"):
-            out.append(part[1:])
+        m = re.search(r"%([\w.\-]+)", part)
+        if m:
+            out.append(m.group(1))
     return out
 
 

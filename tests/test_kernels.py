@@ -77,6 +77,50 @@ def test_sp_filter_matches_ref(shape):
     np.testing.assert_allclose(float(got_e), float(want_e), rtol=1e-5)
 
 
+@pytest.mark.parametrize("shape", [(33, 97), (3, 33, 97)])
+@pytest.mark.parametrize("rng", ["threefry", "hash"])
+def test_ops_backends_bit_identical_on_ragged_shapes(shape, rng):
+    """ref and pallas paths must consume identical random bits: noise is
+    drawn at the original (non-block-multiple) shape and padded, so both
+    backends agree everywhere including the last partial block."""
+    from repro.kernels import ops
+
+    ks = jax.random.split(KEY, 3)
+    w = jax.random.uniform(ks[0], shape, jnp.float32, -0.8, 0.8)
+    dw = 0.05 * jax.random.normal(ks[1], shape)
+    gamma = jnp.exp(0.1 * jax.random.normal(ks[2], shape))
+    rho = 0.3 * jnp.tanh(jax.random.normal(ks[2], shape))
+    kw = dict(dw_min=0.01, tau_min=1.0, tau_max=1.0, sigma_c2c=0.1, bl=10,
+              rng=rng)
+    try:
+        ops.set_backend("ref")
+        want = ops.analog_update(w, dw, gamma, rho, KEY, **kw)
+        ops.set_backend("pallas")
+        got = ops.analog_update(w, dw, gamma, rho, KEY, **kw)
+    finally:
+        ops.set_backend(None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_ops_mvm_backends_identical_on_ragged_shapes():
+    from repro.kernels import ops
+
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (5, 33, 47))
+    w = 0.1 * jax.random.normal(ks[1], (47, 29))
+    io = dict(inp_res=1 / 126, inp_bound=1.0, out_res=1 / 510, out_bound=12.0,
+              out_noise=0.06)
+    try:
+        ops.set_backend("ref")
+        want = ops.analog_mvm(x, w, KEY, **io)
+        ops.set_backend("pallas")
+        got = ops.analog_mvm(x, w, KEY, **io)
+    finally:
+        ops.set_backend(None)
+    tol = 2 * io["out_res"] * float(jnp.max(jnp.abs(x)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol)
+
+
 def test_ops_wrappers_arbitrary_rank():
     """ops.* accept >2-D and 1-D inputs (reshape/pad handled)."""
     from repro.kernels import ops
