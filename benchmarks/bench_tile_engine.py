@@ -1,11 +1,11 @@
 """Tile-engine benchmark: looped (per-tile Python loop) vs grouped (batched,
-shape-grouped TileBank) analog update path.
+shape-grouped TileBank) analog update path, plus a sharded mode.
 
 The looped engine traces one full copy of the pulse-update graph per weight
 matrix; the grouped engine traces one vmapped copy per distinct weight
-*shape*. On a many-layer config this collapses trace time and jitted
-program size from O(layers) to O(distinct shapes), and the fused stacked
-updates are at least as fast to execute.
+*shape* (scanned per same-structure class). On a many-layer config this
+collapses trace time and jitted program size from O(layers) to O(distinct
+shapes), and the fused stacked updates are at least as fast to execute.
 
 Measures, per engine:
   * trace+lower wall time of ``train_step``
@@ -13,13 +13,22 @@ Measures, per engine:
   * compile wall time
   * steady-state steps/sec over a short timed run
 
+``--sharded`` forces a small host device mesh (default 2x2 = (data, model))
+and compares the ZeRO-sharded TileBank (stack dim on the data axis, member
+dims on the model axis per the owning weight's rule) against the fully
+replicated layout: per-device tile-state bytes and steps/s, emitted as a
+JSON report (see benchmarks/README.md for the schema).
+
 Run directly (``--smoke`` for the CI-sized config) or via benchmarks.run:
 
   PYTHONPATH=src python -m benchmarks.bench_tile_engine --smoke
+  PYTHONPATH=src python -m benchmarks.bench_tile_engine --sharded
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 from typing import Dict, List
 
@@ -86,6 +95,76 @@ def bench_engine(engine: str, n_layers: int, shape, steps: int) -> Dict:
     )
 
 
+def _sharded_step_rate(trainer, state, shardings, steps: int) -> float:
+    step = jax.jit(trainer.train_step, in_shardings=(shardings, None),
+                   donate_argnums=(0,))
+    batch = jnp.zeros(())
+    state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    return steps / (time.perf_counter() - t0)
+
+
+def bench_sharded(n_layers: int, shape, steps: int,
+                  data: int = 2, model: int = 2) -> Dict:
+    """ZeRO-sharded vs replicated TileBank on a (data, model) host mesh."""
+    from repro.distributed.sharding import replicated, state_shardings
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(data, model)
+    dev = DeviceConfig(dw_min=0.001, sigma_pm=0.3, sigma_d2d=0.1,
+                       sigma_c2c=0.05)
+    cfg = TrainerConfig(
+        tile=TileConfig(algorithm="erider", device_p=dev, device_w=dev),
+        digital=DigitalOptConfig(kind="sgd"),
+        schedule=ScheduleConfig(kind="constant", base_lr=0.1),
+    )
+    # rule-diverse layers: wq-family and wo-family stacks carry the model
+    # axis on opposite member dims (spec-aware grouping keeps them apart)
+    params = {}
+    for i in range(n_layers // 2):
+        params[f"layer{i:02d}/attn/wq"] = 0.1 * jnp.ones(shape, jnp.float32)
+        params[f"layer{i:02d}/attn/wo"] = 0.1 * jnp.ones(shape, jnp.float32)
+
+    def tile_bytes(state):
+        leaves = jax.tree.leaves(state["tiles"])
+        total = sum(leaf.nbytes for leaf in leaves)
+        per_dev = sum(leaf.addressable_shards[0].data.nbytes
+                      for leaf in leaves)
+        return total, per_dev
+
+    trainer = AnalogTrainer(_loss_fn, cfg,
+                            analog_filter=lambda p, l: True, mesh=mesh)
+    state = trainer.init(jax.random.PRNGKey(0), params)
+    sh = state_shardings(state, mesh)
+    state = jax.device_put(state, sh)
+    total, per_dev_sharded = tile_bytes(state)
+    sharded_rate = _sharded_step_rate(trainer, state, sh, steps)
+
+    base = AnalogTrainer(_loss_fn, cfg, analog_filter=lambda p, l: True)
+    rstate = base.init(jax.random.PRNGKey(0), params)
+    rsh = replicated(rstate, mesh)
+    rstate = jax.device_put(rstate, rsh)
+    _, per_dev_repl = tile_bytes(rstate)
+    repl_rate = _sharded_step_rate(base, rstate, rsh, steps)
+
+    return dict(
+        mode="sharded",
+        mesh=dict(data=data, model=model, devices=mesh.size),
+        n_tiles=n_layers, member_shape=list(shape),
+        groups=[g for g, _ in state["tiles"].index],
+        tile_state_bytes_total=total,
+        tile_state_bytes_per_device_replicated=per_dev_repl,
+        tile_state_bytes_per_device_sharded=per_dev_sharded,
+        reduction_x=round(per_dev_repl / max(per_dev_sharded, 1), 2),
+        steps_per_s_sharded=round(sharded_rate, 2),
+        steps_per_s_replicated=round(repl_rate, 2),
+    )
+
+
 def run(quick: bool = True) -> List[str]:
     n_layers = 8 if quick else 48
     shape = (32, 32) if quick else (256, 256)
@@ -116,7 +195,37 @@ def main() -> None:
                     help="CI-sized config (default; kept for explicitness)")
     ap.add_argument("--full", action="store_true",
                     help="48 layers of 256x256 (minutes on CPU)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="ZeRO-sharded vs replicated TileBank on a small "
+                         "host mesh; prints a JSON report")
+    ap.add_argument("--mesh", default="2x2",
+                    help="sharded-mode mesh as DATAxMODEL (default 2x2)")
+    ap.add_argument("--out", default="",
+                    help="also write the sharded JSON report to this path")
     args = ap.parse_args()
+    if args.sharded:
+        data, model = (int(x) for x in args.mesh.split("x"))
+        need = data * model
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            # the backend reads XLA_FLAGS at first init, which happens at
+            # the jax.devices() call below — not at import
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count={need}")
+        if len(jax.devices()) < need:
+            raise SystemExit(
+                f"--sharded needs {need} devices; run with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need}")
+        r = bench_sharded(8 if not args.full else 48,
+                          (32, 32) if not args.full else (256, 256),
+                          10 if not args.full else 50,
+                          data=data, model=model)
+        text = json.dumps(r, indent=2)
+        print(text)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text + "\n")
+        return
     print("name,us_per_call,derived")
     for row in run(quick=not args.full):
         print(row, flush=True)

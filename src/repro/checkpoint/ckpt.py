@@ -24,7 +24,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-from repro.core.paths import path_str
+from repro.core.paths import npz_key, path_str
 
 _CHUNK_BYTES = 512 * 1024 * 1024
 
@@ -62,7 +62,7 @@ def save(tree, directory: str, step: int, *, asynchronous: bool = False) -> Opti
             chunk, chunk_bytes = {}, 0
 
         for key, arr in sorted(host.items()):
-            safe = key.replace("/", "|")
+            safe = npz_key(key)
             manifest["arrays"][key] = {
                 "shape": list(arr.shape),
                 "dtype": str(arr.dtype),
@@ -112,10 +112,11 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def _legacy_group_members(manifest, shape, dtype_name):
-    """Member weight-paths of one (shape, dtype) tile group in a legacy
-    per-tile checkpoint — sorted, which is exactly the stacking order
-    ``repro.core.tile.group_tiles`` uses."""
+def _legacy_group_members(manifest, shape, dtype_name, tag=""):
+    """Member weight-paths of one tile group in a legacy per-tile
+    checkpoint — sorted, which is exactly the stacking order
+    ``repro.core.tile.group_tiles`` uses. A non-empty ``tag`` keeps only
+    paths whose sharding-rule template matches (spec-aware group keys)."""
     import re
 
     members = []
@@ -124,16 +125,48 @@ def _legacy_group_members(manifest, shape, dtype_name):
         if m and tuple(meta["shape"]) == tuple(shape) \
                 and meta["dtype"] == dtype_name:
             members.append(m.group(1))
+    if tag:
+        from repro.distributed.sharding import rule_template, template_tag
+
+        members = [p for p in members
+                   if template_tag(rule_template(p, len(shape))) == tag]
     return sorted(members)
 
 
-def _legacy_grouped_arr(key, manifest, load_arr):
-    """Assemble a grouped-layout leaf ``tiles/<group>/<slot>`` by stacking
-    the matching per-tile leaves of a legacy (pre-TileBank) checkpoint.
-    Returns None when ``key`` is not a grouped tile leaf."""
+def _bank_member_index(template):
+    """{group name: member weight-paths} of every TileBank in ``template``
+    (the restore target). Member paths live in the bank's static index, not
+    in its leaves, so the re-keying upgrade path reads them here."""
+    from repro.core.tile import TileBank
+
+    members = {}
+
+    def visit(x):
+        if isinstance(x, TileBank):
+            for g, paths in x.index:
+                members[g] = tuple(paths)
+        return None
+
+    jax.tree.map(visit, template,
+                 is_leaf=lambda x: isinstance(x, TileBank))
+    return members
+
+
+def _legacy_grouped_arr(key, manifest, load_arr, bank_members):
+    """Assemble a grouped-layout leaf ``tiles/<group>/<slot>`` missing from
+    the manifest by upgrading either legacy layout:
+
+    * per-tile (pre-TileBank) checkpoints: stack the group's member tiles
+      in group order;
+    * (shape, dtype)-keyed grouped checkpoints (pre-spec-aware keys): the
+      old stack held ALL tiles of that shape/dtype sorted by path — gather
+      the rows belonging to this group's members.
+
+    Returns None when ``key`` is not a grouped tile leaf.
+    """
     import re
 
-    from repro.core.tile import parse_group_name
+    from repro.core.tile import group_name, parse_group_name
 
     m = re.match(r"^tiles/([^/]+)/(.+)$", key)
     if not m:
@@ -141,12 +174,31 @@ def _legacy_grouped_arr(key, manifest, load_arr):
     parsed = parse_group_name(m.group(1))
     if parsed is None:
         return None
-    shape, dtype_name = parsed
-    members = _legacy_group_members(manifest, shape, dtype_name)
+    shape, dtype_name, tag = parsed
+    slot = m.group(2)
+    members = bank_members.get(m.group(1)) \
+        or _legacy_group_members(manifest, shape, dtype_name, tag)
     if not members:
         return None
-    slot = m.group(2)
-    return np.stack([load_arr(f"tiles/{p}/{slot}") for p in members])
+    # 1) per-tile legacy layout
+    if f"tiles/{members[0]}/{slot}" in manifest["arrays"]:
+        return np.stack([load_arr(f"tiles/{p}/{slot}") for p in members])
+    # 2) (shape, dtype)-keyed grouped layout: re-key the old stack. The old
+    # member set is the union of the template's same-(shape, dtype) groups
+    # (same model, regrouped), sorted — the old stacking order.
+    legacy_key = f"tiles/{group_name(shape, dtype_name)}/{slot}"
+    if tag and legacy_key in manifest["arrays"]:
+        union = sorted(
+            p for g, paths in bank_members.items()
+            for p in paths
+            if (parse_group_name(g) or (None, None))[:2]
+            == (shape, dtype_name))
+        old = load_arr(legacy_key)
+        assert old.shape[0] == len(union), (
+            f"legacy group {legacy_key} holds {old.shape[0]} tiles but the "
+            f"restore template names {len(union)}: {union}")
+        return old[[union.index(p) for p in members]]
+    return None
 
 
 def restore(template, directory: str, step: Optional[int] = None, *,
@@ -157,9 +209,11 @@ def restore(template, directory: str, step: Optional[int] = None, *,
     the stored full arrays are device_put with the *new* mesh's shardings).
 
     Grouped tile state (``tiles/<group>/...`` with a leading stack axis)
-    restores from either layout: same-layout checkpoints load directly, and
-    legacy per-tile checkpoints are upgraded on the fly by stacking their
-    member tiles in group order.
+    restores from any layout: same-layout checkpoints load directly; legacy
+    per-tile checkpoints are upgraded on the fly by stacking their member
+    tiles in group order; legacy (shape, dtype)-keyed stacks (pre-spec-aware
+    group keys) are re-keyed by gathering each new group's member rows out
+    of the old combined stack.
     """
     if step is None:
         step = latest_step(directory)
@@ -179,6 +233,7 @@ def restore(template, directory: str, step: Optional[int] = None, *,
             assert zlib.crc32(arr.tobytes()) == meta["crc32"], f"corrupt leaf {key}"
         return arr
 
+    bank_members = _bank_member_index(template)
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         template, is_leaf=lambda x: x is None
     )
@@ -195,7 +250,7 @@ def restore(template, directory: str, step: Optional[int] = None, *,
         if key in manifest["arrays"]:
             arr = load_arr(key)
         else:
-            arr = _legacy_grouped_arr(key, manifest, load_arr)
+            arr = _legacy_grouped_arr(key, manifest, load_arr, bank_members)
             assert arr is not None, f"checkpoint missing leaf {key}"
         expect = tuple(leaf.shape)
         assert tuple(arr.shape) == expect, (key, arr.shape, expect)

@@ -3,7 +3,9 @@
 jax >= 0.5 supports ``keystr(kp, simple=True, separator="/")``; jax 0.4.x
 only accepts ``keystr(keys)``. Tree paths are the stable identifiers for
 every leaf in this codebase (sharding rules, checkpoints, tile grouping),
-so they must render identically across jax versions.
+so they must render identically across jax versions. ``npz_key`` /
+``npz_path`` are the matching on-disk encoding used by checkpoint
+manifests (np.savez member names cannot contain "/").
 """
 from __future__ import annotations
 
@@ -25,3 +27,15 @@ def path_str(kp) -> str:
             else:
                 parts.append(str(k).strip("[].'\""))
         return "/".join(parts)
+
+
+def npz_key(path: str) -> str:
+    """Tree path -> npz member name ("tiles/g8x8_float32_nM/W" ->
+    "tiles|g8x8_float32_nM|W"). Stable across releases: checkpoint
+    manifests persist these names."""
+    return path.replace("/", "|")
+
+
+def npz_path(key: str) -> str:
+    """Inverse of ``npz_key``."""
+    return key.replace("|", "/")

@@ -191,24 +191,34 @@ def expected_pulses(dw, dw_min: float, bl: int = 0):
 # ---------------------------------------------------------------------------
 
 
-def group_name(shape, dtype) -> str:
-    """Stable group key for all tiles of one (shape, dtype): "g64x64_float32".
+def group_name(shape, dtype, tag: str = "") -> str:
+    """Stable group key for all tiles of one (shape, dtype, rule template):
+    "g64x64_float32_nM".
 
-    The name is parseable (see ``parse_group_name``) so a checkpoint written
-    in the grouped layout can be matched back against legacy per-tile keys.
+    ``tag`` is the sharding-rule template tag of the member weights
+    (``distributed.sharding.template_tag``; e.g. "nM" for attention wq,
+    "Mn" for wo) — keying on it keeps stacks from mixing partition rules,
+    so the stacked spec can always carry the members' model axis. An empty
+    tag produces the legacy (shape, dtype)-only key of pre-spec-aware
+    checkpoints. The name is parseable (see ``parse_group_name``) so a
+    checkpoint written in either grouped layout can be matched back against
+    per-tile or re-keyed stacks.
     """
     dims = "x".join(str(int(d)) for d in shape)
-    return f"g{dims}_{jnp.dtype(dtype).name}"
+    base = f"g{dims}_{jnp.dtype(dtype).name}"
+    return f"{base}_{tag}" if tag else base
 
 
 def parse_group_name(name: str) -> Optional[tuple]:
-    """Inverse of ``group_name``: "g64x64_float32" -> ((64, 64), "float32").
-    Returns None if ``name`` is not a group key."""
-    m = re.match(r"^g(\d+(?:x\d+)*)_([A-Za-z0-9_]+)$", name)
+    """Inverse of ``group_name``:
+    "g64x64_float32_nM" -> ((64, 64), "float32", "nM"), and for legacy
+    keys "g64x64_float32" -> ((64, 64), "float32", ""). Returns None if
+    ``name`` is not a group key."""
+    m = re.match(r"^g(\d+(?:x\d+)*)_([A-Za-z0-9]+?)(?:_([MDns]+))?$", name)
     if not m:
         return None
     shape = tuple(int(d) for d in m.group(1).split("x"))
-    return shape, m.group(2)
+    return shape, m.group(2), m.group(3) or ""
 
 
 class TileBank:
@@ -273,10 +283,23 @@ jax.tree_util.register_pytree_with_keys(
 
 
 def group_tiles(shapes: Dict[str, tuple], cfg: TileConfig):
-    """Static grouping: {path: weight shape} -> TileBank index layout."""
+    """Static grouping: {path: weight shape} -> TileBank index layout.
+
+    Groups key on (shape, dtype, sharding-rule template): two same-shape
+    tiles whose owning weights partition differently (attn/wq's (None, "M")
+    vs attn/wo's ("M", None)) must not share a stack, or the stacked spec
+    would have to replicate the model axis (``grouped_tile_spec``). The
+    template is resolved mesh-independently from the PARAM_RULES table, so
+    the grouping — and with it checkpoint group names — is identical on
+    every mesh, including single-host.
+    """
+    from repro.distributed.sharding import rule_template, template_tag
+
     by_group: Dict[str, list] = {}
     for p in sorted(shapes):
-        by_group.setdefault(group_name(shapes[p], cfg.state_dtype), []).append(p)
+        tag = template_tag(rule_template(p, len(shapes[p])))
+        by_group.setdefault(
+            group_name(shapes[p], cfg.state_dtype, tag), []).append(p)
     return tuple((g, tuple(by_group[g])) for g in sorted(by_group))
 
 

@@ -9,15 +9,24 @@ which leaves live on analog tiles, builds pure jit-able ``init`` /
      (analog leaves -> scale * W̄, paper's mixed weight)
   3. digital leaves -> SGD/Adam; analog leaves -> pulse-based tile update
 
-Tiles are stored shape-grouped (TileBank): all tiles of one (shape, dtype)
-stack along a leading axis and phases 1/3b run as ONE vmapped instance per
-group — the jitted train_step contains O(distinct shapes) copies of the
-pulse-update graph, not O(layers). ``TrainerConfig(engine="looped")`` keeps
-the legacy per-tile dict layout and Python loop as a reference baseline.
+Tiles are stored shape-grouped (TileBank): all tiles of one (shape, dtype,
+sharding-rule template) stack along a leading axis and phases 1/3b run as
+ONE vmapped instance per group; groups with identical stacked structure
+(same member shape/count/dtype, e.g. the wq-family and wo-family of a
+uniform transformer) additionally share one ``jax.lax.scan``'ed graph, so
+the jitted train_step stays O(distinct structures) — O(1) in depth — not
+O(layers). ``TrainerConfig(engine="looped")`` keeps the legacy per-tile
+dict layout and Python loop as a reference baseline;
+``TrainerConfig(scan_groups=False)`` unrolls the groups (bit-identical to
+the scanned path — same per-group fold_in keys).
 
 The same train_step is used single-host and under GSPMD (the dry-run lowers
 it with sharded in/out specs; gradients reduce over the data axes before
 pulse quantization, so Assumption 3.4 applies to the global gradient).
+Passing ``mesh=`` pins the grouped update path to explicit in/out specs —
+the stack dim on the ZeRO/data axes, member dims on the model axis — via
+shard_map where available (jax >= 0.6) and with_sharding_constraint on
+jax 0.4.x (see distributed/sharding.py).
 """
 from __future__ import annotations
 
@@ -48,13 +57,17 @@ class TrainerConfig:
     # full-batch gradient, as in the single-device math).
     microbatch: int = 1
     accum_dtype: Any = jnp.float32
-    # Tile engine. "grouped" (default) stacks tiles by (shape, dtype) into a
-    # TileBank and runs one vmapped begin_step/update per *group*, so the
-    # jitted train_step contains O(distinct shapes) copies of the pulse-update
-    # graph instead of O(layers). "looped" keeps the legacy per-tile dict
-    # layout and Python loop (reference/benchmark baseline; also the layout
-    # of pre-TileBank checkpoints).
+    # Tile engine. "grouped" (default) stacks tiles by (shape, dtype, rule
+    # template) into a TileBank and runs one vmapped begin_step/update per
+    # *group*, so the jitted train_step contains O(distinct shapes) copies
+    # of the pulse-update graph instead of O(layers). "looped" keeps the
+    # legacy per-tile dict layout and Python loop (reference/benchmark
+    # baseline; also the layout of pre-TileBank checkpoints).
     engine: str = "grouped"
+    # Scan same-structure group classes with jax.lax.scan instead of
+    # unrolling one vmapped instance per group: program size stays O(1) in
+    # the number of rule-split groups. False unrolls (bit-identical).
+    scan_groups: bool = True
 
     def __post_init__(self):
         assert self.engine in ("grouped", "looped"), self.engine
@@ -148,16 +161,114 @@ jax.tree_util.register_pytree_with_keys(
 )
 
 
+def _scan_classes(bank: TileBank):
+    """Same-structure classes of tile groups.
+
+    Groups whose stacked states have identical treedef and leaf
+    shapes/dtypes — e.g. the wq-family and wo-family stacks of a uniform
+    transformer, distinct groups only by sharding-rule tag — can share one
+    lax.scan'ed copy of the tile graph instead of one unrolled vmap each.
+    Returns a list of tuples of group indices into ``bank.index``.
+    """
+    classes: Dict[Any, list] = {}
+    for gi, (g, _) in enumerate(bank.index):
+        leaves, treedef = jax.tree_util.tree_flatten(bank.groups[g])
+        sig = (treedef, tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+        classes.setdefault(sig, []).append(gi)
+    return [tuple(v) for v in classes.values()]
+
+
 class AnalogTrainer:
     def __init__(
         self,
         loss_fn: LossFn,
         cfg: TrainerConfig,
         analog_filter: PathPredicate = default_analog_filter,
+        mesh=None,
     ):
+        """``mesh``: optional jax.sharding.Mesh. When set, the grouped tile
+        phases run under explicit in/out specs (stack dim on the ZeRO/data
+        axes, member dims on the model axis per the owning weight's rule);
+        when None, layout is left to GSPMD propagation from the caller's
+        in_shardings."""
         self.loss_fn = loss_fn
         self.cfg = cfg
         self.analog_filter = analog_filter
+        self.mesh = mesh
+
+    def _constrain(self, tree, member_paths, prefix: int = 0):
+        if self.mesh is None:
+            return tree
+        from repro.distributed import sharding as shd
+
+        return shd.constrain_stacked(tree, member_paths, self.mesh,
+                                     prefix=prefix)
+
+    def _grouped_apply(self, bank: TileBank, fn, key, extras=()):
+        """One vmapped ``fn`` instance per tile group, scanned per class.
+
+        ``fn(tile_state, key, *extra)`` operates on a single tile; it is
+        vmapped over each group's stack, and same-structure classes of
+        groups (``_scan_classes``) additionally run under one jax.lax.scan,
+        so the jitted program holds one copy of the tile graph per class
+        instead of per group. Per-group keys fold the group's index
+        position exactly like the unrolled engine, so scanning is
+        bit-identical to unrolling. With a mesh, stacks are pinned to
+        explicit specs: shard_map over the stack axis where available
+        (jax >= 0.6, element-local fn), with_sharding_constraint + GSPMD
+        otherwise (jax 0.4.x).
+
+        extras: {group-name: stacked array} pytrees of per-group inputs
+        (analog gradients). Returns {group-name: vmapped fn output}.
+        """
+        index = bank.index
+        vfn = jax.vmap(
+            lambda ts, kr, *ex: fn(ts, jax.random.wrap_key_data(kr), *ex))
+
+        def keys_raw(gi, n):
+            return jax.random.key_data(
+                jax.random.split(jax.random.fold_in(key, gi), n))
+
+        classes = (_scan_classes(bank) if self.cfg.scan_groups
+                   else [(gi,) for gi in range(len(index))])
+        out = {}
+        for cls in classes:
+            if len(cls) == 1:
+                gi = cls[0]
+                g, paths = index[gi]
+                args = (self._constrain(bank.groups[g], paths),
+                        keys_raw(gi, len(paths))) + tuple(
+                            self._constrain(e[g], paths) for e in extras)
+                res = None
+                if self.mesh is not None:
+                    from repro.distributed import sharding as shd
+
+                    res = shd.shard_stacked_call(
+                        vfn, self.mesh, len(paths), *args)
+                if res is None:
+                    res = vfn(*args)
+                out[g] = self._constrain(res, paths)
+            else:
+                names = [index[gi][0] for gi in cls]
+                paths_list = tuple(index[gi][1] for gi in cls)
+                stacked = jax.tree.map(
+                    lambda *ls: jnp.stack(ls),
+                    *(bank.groups[g] for g in names))
+                kr = jnp.stack(
+                    [keys_raw(gi, len(index[gi][1])) for gi in cls])
+                ex = [jnp.stack([e[g] for g in names]) for e in extras]
+                stacked = self._constrain(stacked, paths_list, prefix=1)
+                ex = [self._constrain(x, paths_list, prefix=1) for x in ex]
+
+                def body(carry, xs):
+                    return carry, vfn(*xs)
+
+                _, res = jax.lax.scan(body, (), (stacked, kr, *ex))
+                for ci, gi in enumerate(cls):
+                    g, paths = index[gi]
+                    out[g] = self._constrain(
+                        jax.tree.map(lambda leaf: leaf[ci], res), paths)
+        return out
 
     # -- state ------------------------------------------------------------
     def init(self, key, params, sp_estimates: Optional[Dict[str, Any]] = None) -> TrainState:
@@ -215,17 +326,13 @@ class AnalogTrainer:
         key, k_begin, k_model, k_upd = jax.random.split(key, 4)
         grouped = isinstance(state["tiles"], TileBank)
 
-        # phase 1: chopper / Q-tilde sync — one vmapped begin_step per shape
-        # group (grouped engine) or one per tile (legacy looped engine)
+        # phase 1: chopper / Q-tilde sync — one vmapped begin_step per
+        # group, scanned per same-structure class (grouped engine), or one
+        # per tile (legacy looped engine)
         if grouped:
             bank: TileBank = state["tiles"]
-            begun = {}
-            for gi, (g, paths) in enumerate(bank.index):
-                keys = jax.random.split(
-                    jax.random.fold_in(k_begin, gi), len(paths))
-                begun[g] = jax.vmap(
-                    lambda ts, k: alg.begin_step(ts, k, tcfg))(
-                        bank.groups[g], keys)
+            begun = self._grouped_apply(
+                bank, lambda ts, k: alg.begin_step(ts, k, tcfg), k_begin)
             tiles = TileBank(begun, bank.index)
         else:
             tiles = {
@@ -281,22 +388,20 @@ class AnalogTrainer:
         )
 
         # phase 3b: analog branch (pulse updates) — grouped engine runs ONE
-        # vmapped pulse-update per shape group over the stacked state, with a
-        # single split-once-per-group key; looped engine is the legacy
-        # O(tiles) unrolled reference.
+        # vmapped pulse-update per group over the stacked state (scanned per
+        # same-structure class), with a single split-once-per-group key;
+        # looped engine is the legacy O(tiles) unrolled reference.
         agrads = extract_analog_grads(grads, tiles)
         tile_metrics = []  # per-group (n,)-vector metrics / per-tile scalars
         if grouped:
-            updated = {}
-            for gi, (g, paths) in enumerate(tiles.index):
-                gg = jnp.stack([agrads[p] for p in paths])
-                keys = jax.random.split(
-                    jax.random.fold_in(k_upd, gi), len(paths))
-                updated[g], gm = jax.vmap(
-                    lambda ts, grd, k: alg.update(ts, grd, k, tcfg, lr))(
-                        tiles.groups[g], gg, keys)
-                tile_metrics.append(gm)
-            new_tiles = TileBank(updated, tiles.index)
+            stacked_grads = {g: jnp.stack([agrads[p] for p in paths])
+                             for g, paths in tiles.index}
+            res = self._grouped_apply(
+                tiles, lambda ts, k, grd: alg.update(ts, grd, k, tcfg, lr),
+                k_upd, extras=(stacked_grads,))
+            new_tiles = TileBank({g: res[g][0] for g, _ in tiles.index},
+                                 tiles.index)
+            tile_metrics = [res[g][1] for g, _ in tiles.index]
         else:
             new_tiles = {}
             for i, (p, ts) in enumerate(sorted(tiles.items())):

@@ -20,12 +20,18 @@ pads on 512 ways waste memory).
 from __future__ import annotations
 
 import re
+import warnings
 from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.paths import path_str
+
+# jax >= 0.6 promotes shard_map to a top-level API; on 0.4.x the grouped
+# tile update falls back to with_sharding_constraint + GSPMD (see
+# shard_stacked_call).
+_SHARD_MAP = getattr(jax, "shard_map", None)
 
 
 def mesh_axis_sizes(mesh: Mesh):
@@ -87,45 +93,80 @@ def _resolve(template, shape, data_axes, dsize, model_ax, msize, zero_dim: Optio
     return P(*spec)
 
 
-def param_spec(path: str, shape, mesh: Mesh, zero: bool = False) -> P:
-    data_axes, dsize, model_ax, msize = mesh_axis_sizes(mesh)
+def rule_template(path: str, ndim: int) -> Tuple:
+    """Mesh-independent spec template of a parameter path, normalized to
+    ``ndim`` dims (leading dims pad with None; body-scan params gain a
+    leading None for the period axis). This is the rule identity used for
+    spec-aware tile grouping: two paths with equal templates shard
+    identically on every mesh, so their tiles may share a stack."""
     template = None
     for pat, tmpl in PARAM_RULES:
         if re.search(pat, path):
             template = tmpl
             break
     if template is None:
-        template = (None,) * len(shape)
-    if "/body/" in path and len(shape) > len(template):
+        template = (None,) * ndim
+    if "/body/" in path and ndim > len(template):
         template = (None,) + tuple(template)
-    while len(template) < len(shape):
+    while len(template) < ndim:
         template = (None,) + tuple(template)
-    template = tuple(template[-len(shape):]) if len(shape) else ()
+    return tuple(template[-ndim:]) if ndim else ()
+
+
+def template_tag(template) -> str:
+    """Short stable name of a rule template, used inside tile-group keys:
+    (None, "M") -> "nM", ("M", None, None) -> "Mnn", () -> "s" (scalar)."""
+    if not template:
+        return "s"
+    return "".join({"M": "M", "D": "D"}.get(t, "n") for t in template)
+
+
+def param_spec(path: str, shape, mesh: Mesh, zero: bool = False) -> P:
+    data_axes, dsize, model_ax, msize = mesh_axis_sizes(mesh)
+    template = rule_template(path, len(shape))
     return _resolve(template, shape, data_axes, dsize, model_ax, msize,
                     0 if zero else None)
 
 
 _TILE_SLOTS = r"(W|P|Qd|Qt|H|dev_p/(gamma|rho)|dev_w/(gamma|rho))"
 
+# group signatures already warned about (one warning per offending stack)
+_MIXED_RULE_WARNED: set = set()
+
 
 def grouped_tile_spec(member_paths, shape, mesh: Mesh,
                       zero: bool = True) -> P:
     """PartitionSpec for a stacked tile-group array (n, *member-shape).
 
-    Member dims inherit the owning weights' model-axis spec — but only when
-    every member of the group agrees: tiles are grouped by (shape, dtype),
-    so one stack can mix rules (attn/wq wants (None, "M") while same-shape
-    attn/wo wants ("M", None)); a disagreeing group replicates its member
-    dims rather than silently transposing half its tiles' layout. The
-    leading stack axis is the natural ZeRO/scan axis (element-local updates,
-    DESIGN.md §3) and takes the data axes when the group size divides,
-    falling back to the first divisible replicated member dim otherwise.
+    Member dims inherit the owning weights' model-axis spec. Groups key on
+    (shape, dtype, rule template) — see ``repro.core.tile.group_tiles`` — so
+    every member of a stack resolves to the same spec and the member dims
+    can always carry the model axis. A stack that nonetheless mixes rules
+    (hand-built banks, or pre-spec-aware legacy groups) replicates its
+    member dims rather than silently transposing half its tiles' layout,
+    and warns once naming the offending paths. The leading stack axis is
+    the natural ZeRO/scan axis (element-local updates, DESIGN.md §3) and
+    takes the data axes when the group size divides, falling back to the
+    first divisible replicated member dim otherwise.
     """
     if isinstance(member_paths, str):
         member_paths = (member_paths,)
     data_axes, dsize, model_ax, msize = mesh_axis_sizes(mesh)
-    specs = {param_spec(p, shape[1:], mesh) for p in member_paths}
-    inner = specs.pop() if len(specs) == 1 else P(*([None] * (len(shape) - 1)))
+    per_path = {p: param_spec(p, shape[1:], mesh) for p in member_paths}
+    specs = set(per_path.values())
+    if len(specs) == 1:
+        inner = specs.pop()
+    else:
+        inner = P(*([None] * (len(shape) - 1)))
+        sig = tuple(sorted(member_paths))
+        if sig not in _MIXED_RULE_WARNED:
+            _MIXED_RULE_WARNED.add(sig)
+            warnings.warn(
+                "tile group mixes partition rules; model axis dropped "
+                "(member dims replicate) for stack of "
+                + ", ".join(f"{p}->{per_path[p]}" for p in sig)
+                + " — re-group with spec-aware keys (core.tile.group_tiles)",
+                stacklevel=2)
     spec = [None] + list(inner) + [None] * (len(shape) - 1 - len(inner))
     if zero and data_axes and dsize > 1:
         daxes = data_axes if len(data_axes) > 1 else data_axes[0]
@@ -138,6 +179,75 @@ def grouped_tile_spec(member_paths, shape, mesh: Mesh,
                     spec[dim] = daxes
                     break
     return P(*spec)
+
+
+def merge_specs(specs):
+    """Dim-wise agreement of PartitionSpecs: keep an axis only where every
+    spec places it; disagreeing dims replicate. Used to constrain a scan
+    stack of same-structure groups whose member rules differ."""
+    specs = [tuple(s) for s in specs]
+    n = max((len(s) for s in specs), default=0)
+    specs = [s + (None,) * (n - len(s)) for s in specs]
+    return P(*[s0 if all(s[d] == s0 for s in specs) else None
+               for d, s0 in enumerate(specs[0])]) if specs else P()
+
+
+def constrain_stacked(tree, member_paths, mesh: Mesh, zero: bool = True,
+                      prefix: int = 0):
+    """with_sharding_constraint over every stacked tile-state leaf of
+    ``tree`` (a stacked TileState, a stacked gradient array, or any pytree
+    of (n, *member-shape) arrays).
+
+    Leaves of rank >= prefix + 3 (``prefix`` extra leading axes — the scan
+    class axis — then stack axis + a >=2-D member weight) get the group
+    spec from ``grouped_tile_spec``; per-tile scalars (n,) and seeds (n, 2)
+    pin to replicated, matching ``state_shardings`` so a donated train_step
+    round-trips without resharding. ``member_paths`` may be a tuple of path
+    tuples, one per scanned group — the constraint is then the dim-wise
+    agreement of the groups' specs (merge_specs).
+    """
+    paths_list = [member_paths] if member_paths and isinstance(
+        member_paths[0], str) else list(member_paths)
+
+    def c(leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd < prefix + 3:
+            spec = P(*([None] * nd))
+        else:
+            inner = merge_specs([
+                grouped_tile_spec(ps, leaf.shape[prefix:], mesh, zero=zero)
+                for ps in paths_list])
+            spec = P(*([None] * prefix + list(inner)))
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
+
+    return jax.tree.map(c, tree)
+
+
+def shard_stacked_call(fn, mesh: Mesh, n: int, *args):
+    """Run ``fn(*args)`` with every argument/output's leading axis (length
+    ``n``) sharded over the data axes, as a manual map.
+
+    ``fn`` must be element-local over axis 0 — true of every stacked tile
+    phase (begin_step / update vmapped over the stack): tile updates touch
+    only their own elements, so the shard_map needs no collectives and is
+    bit-identical to the global call. Requires jax >= 0.6 (top-level
+    jax.shard_map) and n divisible by the data-axes size; returns None
+    otherwise and the caller falls back to with_sharding_constraint +
+    GSPMD, which is the only path on jax 0.4.x.
+    """
+    data_axes, dsize, _, _ = mesh_axis_sizes(mesh)
+    if _SHARD_MAP is None or dsize <= 1 or n % dsize:
+        return None
+    daxes = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def spec_of(leaf):
+        return P(daxes, *([None] * (getattr(leaf, "ndim", 1) - 1)))
+
+    in_specs = jax.tree.map(spec_of, args)
+    out_specs = jax.tree.map(spec_of, jax.eval_shape(fn, *args))
+    return _SHARD_MAP(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs)(*args)
 
 
 def state_shardings(state_tree, mesh: Mesh, zero_states: bool = True):

@@ -71,7 +71,7 @@ def make_tile_cfg(algorithm: str = "erider") -> TileConfig:
 
 
 def make_trainer(model: LM, arch: str, algorithm: str, dsize: int,
-                 tile_engine: str = "grouped") -> AnalogTrainer:
+                 tile_engine: str = "grouped", mesh=None) -> AnalogTrainer:
     mb = MICROBATCH.get(arch, 2)
     mb = max(1, min(mb, 256 // dsize))
     tcfg = TrainerConfig(
@@ -82,7 +82,7 @@ def make_trainer(model: LM, arch: str, algorithm: str, dsize: int,
         accum_dtype=jnp.bfloat16,
         engine=tile_engine,
     )
-    return AnalogTrainer(model.loss, tcfg, default_analog_filter)
+    return AnalogTrainer(model.loss, tcfg, default_analog_filter, mesh=mesh)
 
 
 # perf-iteration options (see EXPERIMENTS.md §Perf):
@@ -125,7 +125,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, algorithm: str = "erider",
 
     if spec.kind == "train":
         trainer = make_trainer(model, arch, algorithm, dsize,
-                               tile_engine=o["tile_engine"])
+                               tile_engine=o["tile_engine"], mesh=mesh)
         if o["microbatch"] is not None:
             trainer.cfg = _dc.replace(trainer.cfg, microbatch=o["microbatch"])
         astate = trainer.abstract_state(aparams)

@@ -32,8 +32,15 @@ def make_mesh(shape, axes):
     return _mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+def make_host_mesh(data: int = 1, model: int = 1, pods: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smoke).
+
+    ``pods > 1`` adds the leading "pod" axis so host-device tests exercise
+    the multi-pod ZeRO path (tile stacks shard over pod x data) with the
+    same axis names the production mesh uses.
+    """
     n = len(jax.devices())
-    assert data * model <= n, (data, model, n)
+    assert pods * data * model <= n, (pods, data, model, n)
+    if pods > 1:
+        return _mesh((pods, data, model), ("pod", "data", "model"))
     return _mesh((data, model), ("data", "model"))

@@ -77,7 +77,8 @@ def main(argv=None) -> None:
         schedule=ScheduleConfig(kind="cosine", base_lr=args.lr,
                                 total_steps=args.steps, warmup_steps=min(20, args.steps // 5)),
     )
-    trainer = AnalogTrainer(model.loss, tcfg, default_analog_filter)
+    trainer = AnalogTrainer(model.loss, tcfg, default_analog_filter,
+                            mesh=mesh if mesh.size > 1 else None)
 
     key = jax.random.PRNGKey(0)
     params = model.init(key)

@@ -47,6 +47,38 @@ def test_param_spec_divisibility_fallback():
     assert spec3 == P("data", "model")
 
 
+def test_rule_template_tags():
+    """Mesh-independent rule templates drive spec-aware tile grouping."""
+    from repro.distributed.sharding import rule_template, template_tag
+
+    assert template_tag(rule_template("l0/attn/wq", 2)) == "nM"
+    assert template_tag(rule_template("l0/attn/wo", 2)) == "Mn"
+    assert template_tag(rule_template("stack/body/p0/mlp/wi", 3)) == "nnM"
+    assert template_tag(rule_template("unmatched", 2)) == "nn"
+    assert template_tag(()) == "s"
+
+
+def test_merge_specs():
+    from repro.distributed.sharding import merge_specs
+
+    assert merge_specs([P("data", None, "model"), P("data", "model", None)]) \
+        == P("data", None, None)
+    assert merge_specs([P("data", None, "model")]) == P("data", None, "model")
+
+
+def test_grouped_tile_spec_multi_pod_stack():
+    """Multi-pod ZeRO: the stack axis takes pod x data when divisible."""
+    from repro.distributed.sharding import grouped_tile_spec
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 4, "model": 8}
+
+    spec = grouped_tile_spec(("attn/wq",), (16, 32, 64), FakeMesh(),
+                             zero=True)
+    assert spec == P(("pod", "data"), None, "model")
+
+
 def test_cache_spec_long_context():
     """batch=1 decode: sequence dim gets the data axes."""
     import repro.distributed.sharding as sh
@@ -161,6 +193,58 @@ assert r1["roofline"]["hlo_flops"] > 0
 print("DRYRUN_OK")
 """, timeout=560)
     assert "DRYRUN_OK" in out
+
+
+def test_sharded_tile_bank_2x2_subprocess():
+    """Acceptance criterion: on a 2x2 (data, model) mesh, same-shape tiles
+    with different partition rules occupy distinct groups whose stacks carry
+    the model axis, the stack dim takes the ZeRO/data axis, per-device
+    tile-state bytes drop by ~the data size vs replicated, and the grouped
+    train_step runs under the explicit specs."""
+    out = _run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.device import DeviceConfig
+from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
+from repro.core.tile import TileConfig
+from repro.core.trainer import AnalogTrainer, TrainerConfig
+from repro.distributed.sharding import state_shardings
+from repro.launch.mesh import make_host_mesh
+
+assert make_host_mesh(2, 1, pods=2).axis_names == ("pod", "data", "model")
+mesh = make_host_mesh(2, 2)
+dev = DeviceConfig(dw_min=0.01, sigma_pm=0.3, sigma_d2d=0.1, sigma_c2c=0.05)
+cfg = TrainerConfig(
+    tile=TileConfig(algorithm="erider", device_p=dev, device_w=dev),
+    digital=DigitalOptConfig(kind="sgd"),
+    schedule=ScheduleConfig(kind="constant", base_lr=0.1))
+def loss(params, batch, rng):
+    return sum(jnp.sum(v ** 2) for _, v in sorted(params.items())), {}
+trainer = AnalogTrainer(loss, cfg, analog_filter=lambda p, l: True, mesh=mesh)
+params = {}
+for i in range(2):
+    params[f"l{i}/attn/wq"] = 0.1 * jnp.ones((8, 8))
+    params[f"l{i}/attn/wo"] = 0.1 * jnp.ones((8, 8))
+state = trainer.init(jax.random.PRNGKey(0), params)
+names = set(g for g, _ in state["tiles"].index)
+assert names == {"g8x8_float32_nM", "g8x8_float32_Mn"}, names
+sh = state_shardings(state, mesh)
+assert sh["tiles"].groups["g8x8_float32_nM"]["W"].spec == P("data", None, "model")
+assert sh["tiles"].groups["g8x8_float32_Mn"]["W"].spec == P("data", "model", None)
+state = jax.device_put(state, sh)
+total = sum(l.nbytes for l in jax.tree.leaves(state["tiles"]))
+per_dev = sum(l.addressable_shards[0].data.nbytes
+              for l in jax.tree.leaves(state["tiles"]))
+assert per_dev <= total / 2 + 1024, (per_dev, total)   # ~ZeRO/data factor
+step = jax.jit(trainer.train_step, in_shardings=(sh, None), donate_argnums=(0,))
+for _ in range(2):
+    state, m = step(state, jnp.zeros(()))
+w = state["tiles"].groups["g8x8_float32_nM"]["W"]
+assert w.sharding.spec == P("data", None, "model"), w.sharding
+assert np.isfinite(float(m["loss"]))
+print("SHARDED_BANK_OK", per_dev, total)
+""", devices=4)
+    assert "SHARDED_BANK_OK" in out
 
 
 def test_elastic_restore_subprocess():

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Check internal markdown links in README.md, docs/ and benchmarks/.
+
+Validates every relative [text](target) link — external (http/mailto) and
+pure-anchor links are skipped; targets resolve relative to the file that
+contains them; a trailing #anchor is allowed (only the file part is
+checked). Exits nonzero listing every broken link.
+
+Run from anywhere:  python tools/check_doc_links.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_GLOBS = ["README.md", "docs", "benchmarks/README.md"]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files():
+    for entry in DOC_GLOBS:
+        path = os.path.join(ROOT, entry)
+        if os.path.isdir(path):
+            for dirpath, _, names in os.walk(path):
+                for n in sorted(names):
+                    if n.endswith(".md"):
+                        yield os.path.join(dirpath, n)
+        elif os.path.isfile(path):
+            yield path
+
+
+def check_file(md_path):
+    broken = []
+    with open(md_path) as f:
+        text = f.read()
+    # drop fenced code blocks: JSON/code samples are not links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(md_path), rel))
+        if not os.path.exists(resolved):
+            broken.append((target, resolved))
+    return broken
+
+
+def main() -> int:
+    n_files, n_links_bad = 0, 0
+    for md in doc_files():
+        n_files += 1
+        for target, resolved in check_file(md):
+            n_links_bad += 1
+            print(f"BROKEN {os.path.relpath(md, ROOT)}: ({target}) "
+                  f"-> {os.path.relpath(resolved, ROOT)} does not exist")
+    if n_links_bad:
+        print(f"{n_links_bad} broken link(s) across {n_files} file(s)")
+        return 1
+    print(f"OK: {n_files} markdown file(s), all internal links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
