@@ -19,16 +19,25 @@ dims on the model axis per the owning weight's rule) against the fully
 replicated layout: per-device tile-state bytes and steps/s, emitted as a
 JSON report (see benchmarks/README.md for the schema).
 
+``--mixed`` measures the AnalogPlan mixed-policy path: the same shapes
+trained once under a single policy and once under a two-policy plan (two
+algorithms x two device presets -> two policy-split groups). ``--check``
+exits nonzero when the mixed plan's steps/s falls more than 20% below the
+single-policy grouped engine — the CI guard that per-group policy
+specialization stays free.
+
 Run directly (``--smoke`` for the CI-sized config) or via benchmarks.run:
 
   PYTHONPATH=src python -m benchmarks.bench_tile_engine --smoke
   PYTHONPATH=src python -m benchmarks.bench_tile_engine --sharded
+  PYTHONPATH=src python -m benchmarks.bench_tile_engine --mixed --check
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
 from typing import Dict, List
 
@@ -37,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.device import DeviceConfig
 from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
+from repro.core.plan import AnalogPlan, TilePolicy
 from repro.core.tile import TileConfig
 from repro.core.trainer import AnalogTrainer, TrainerConfig
 
@@ -48,16 +58,20 @@ def _loss_fn(params, batch, rng):
     return loss, {}
 
 
+def _single_policy_plan(dev: DeviceConfig) -> AnalogPlan:
+    tile = TileConfig(algorithm="erider", device_p=dev, device_w=dev)
+    return AnalogPlan.of(("**", TilePolicy(tile, name="erider")))
+
+
 def _build(n_layers: int, shape, engine: str):
     dev = DeviceConfig(dw_min=0.001, sigma_pm=0.3, sigma_d2d=0.1,
                        sigma_c2c=0.05)
     cfg = TrainerConfig(
-        tile=TileConfig(algorithm="erider", device_p=dev, device_w=dev),
         digital=DigitalOptConfig(kind="sgd"),
         schedule=ScheduleConfig(kind="constant", base_lr=0.1),
         engine=engine,
     )
-    trainer = AnalogTrainer(_loss_fn, cfg, analog_filter=lambda p, l: True)
+    trainer = AnalogTrainer(_loss_fn, cfg, plan=_single_policy_plan(dev))
     params = {f"layer{i:02d}/w": 0.1 * jnp.ones(shape, jnp.float32)
               for i in range(n_layers)}
     state = trainer.init(jax.random.PRNGKey(0), params)
@@ -118,10 +132,10 @@ def bench_sharded(n_layers: int, shape, steps: int,
     dev = DeviceConfig(dw_min=0.001, sigma_pm=0.3, sigma_d2d=0.1,
                        sigma_c2c=0.05)
     cfg = TrainerConfig(
-        tile=TileConfig(algorithm="erider", device_p=dev, device_w=dev),
         digital=DigitalOptConfig(kind="sgd"),
         schedule=ScheduleConfig(kind="constant", base_lr=0.1),
     )
+    plan = _single_policy_plan(dev)
     # rule-diverse layers: wq-family and wo-family stacks carry the model
     # axis on opposite member dims (spec-aware grouping keeps them apart)
     params = {}
@@ -136,15 +150,14 @@ def bench_sharded(n_layers: int, shape, steps: int,
                       for leaf in leaves)
         return total, per_dev
 
-    trainer = AnalogTrainer(_loss_fn, cfg,
-                            analog_filter=lambda p, l: True, mesh=mesh)
+    trainer = AnalogTrainer(_loss_fn, cfg, plan=plan, mesh=mesh)
     state = trainer.init(jax.random.PRNGKey(0), params)
     sh = state_shardings(state, mesh)
     state = jax.device_put(state, sh)
     total, per_dev_sharded = tile_bytes(state)
     sharded_rate = _sharded_step_rate(trainer, state, sh, steps)
 
-    base = AnalogTrainer(_loss_fn, cfg, analog_filter=lambda p, l: True)
+    base = AnalogTrainer(_loss_fn, cfg, plan=plan)
     rstate = base.init(jax.random.PRNGKey(0), params)
     rsh = replicated(rstate, mesh)
     rstate = jax.device_put(rstate, rsh)
@@ -163,6 +176,56 @@ def bench_sharded(n_layers: int, shape, steps: int,
         steps_per_s_sharded=round(sharded_rate, 2),
         steps_per_s_replicated=round(repl_rate, 2),
     )
+
+
+def bench_mixed(n_layers: int, shape, steps: int) -> Dict:
+    """Mixed-policy (AnalogPlan) vs single-policy grouped engine on the
+    same shapes: one trainer, two (algorithm, device) policies -> two
+    policy-split groups, vs all tiles under one policy/one group."""
+    dev_a = DeviceConfig(dw_min=0.001, sigma_pm=0.3, sigma_d2d=0.1,
+                         sigma_c2c=0.05)
+    dev_b = DeviceConfig(dw_min=0.002, sigma_pm=0.5, sigma_d2d=0.1,
+                         sigma_c2c=0.1, ref_mean=0.1, ref_std=0.1)
+    pol_a = TilePolicy(TileConfig(algorithm="erider", device_p=dev_a,
+                                  device_w=dev_a), name="erider-a")
+    pol_b = TilePolicy(TileConfig(algorithm="rider", device_p=dev_b,
+                                  device_w=dev_a), name="rider-b")
+    plans = {
+        "single": AnalogPlan.of(("**", pol_a)),
+        "mixed": AnalogPlan.of(("**/attn/*", pol_a), ("**/mlp/*", pol_b)),
+    }
+    params = {}
+    for i in range(n_layers // 2):
+        params[f"layer{i:02d}/attn/wq"] = 0.1 * jnp.ones(shape, jnp.float32)
+        params[f"layer{i:02d}/mlp/wi"] = 0.1 * jnp.ones(shape, jnp.float32)
+    cfg = TrainerConfig(
+        digital=DigitalOptConfig(kind="sgd"),
+        schedule=ScheduleConfig(kind="constant", base_lr=0.1),
+    )
+
+    result: Dict = dict(mode="mixed", n_tiles=len(params),
+                        member_shape=list(shape), steps=steps)
+    batch = jnp.zeros(())
+    for name, plan in plans.items():
+        trainer = AnalogTrainer(_loss_fn, cfg, plan=plan)
+        state = trainer.init(jax.random.PRNGKey(0), params)
+        t0 = time.perf_counter()
+        compiled = jax.jit(trainer.train_step, donate_argnums=(0,)) \
+            .lower(state, batch).compile()
+        t_compile = time.perf_counter() - t0
+        state, m = compiled(state, batch)
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = compiled(state, batch)
+        jax.block_until_ready(m["loss"])
+        dt = time.perf_counter() - t0
+        result[f"groups_{name}"] = [g for g, _ in state["tiles"].index]
+        result[f"compile_s_{name}"] = round(t_compile, 3)
+        result[f"steps_per_s_{name}"] = round(steps / dt, 2)
+    result["mixed_over_single"] = round(
+        result["steps_per_s_mixed"] / max(result["steps_per_s_single"], 1e-9), 3)
+    return result
 
 
 def run(quick: bool = True) -> List[str]:
@@ -198,11 +261,37 @@ def main() -> None:
     ap.add_argument("--sharded", action="store_true",
                     help="ZeRO-sharded vs replicated TileBank on a small "
                          "host mesh; prints a JSON report")
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed-policy AnalogPlan vs single-policy grouped "
+                         "engine on the same shapes; prints a JSON report")
+    ap.add_argument("--check", action="store_true",
+                    help="with --mixed: exit 1 if the mixed plan regresses "
+                         "steps/s by more than 20%% vs single-policy")
     ap.add_argument("--mesh", default="2x2",
                     help="sharded-mode mesh as DATAxMODEL (default 2x2)")
     ap.add_argument("--out", default="",
-                    help="also write the sharded JSON report to this path")
+                    help="also write the sharded/mixed JSON report to this "
+                         "path")
     args = ap.parse_args()
+    if args.mixed:
+        # (128, 128) members: big enough that per-group dispatch overhead
+        # amortizes and the ratio measures the policy split, not kernel
+        # launch latency (at (32, 32) even the single-policy engine is
+        # dominated by fixed per-step costs)
+        r = bench_mixed(8 if not args.full else 48,
+                        (128, 128) if not args.full else (256, 256),
+                        20 if not args.full else 50)
+        text = json.dumps(r, indent=2)
+        print(text)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text + "\n")
+        if args.check and r["mixed_over_single"] < 0.8:
+            print(f"FAIL: mixed-policy steps/s is "
+                  f"{r['mixed_over_single']:.2f}x single-policy (< 0.8x)",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        return
     if args.sharded:
         data, model = (int(x) for x in args.mesh.split("x"))
         need = data * model

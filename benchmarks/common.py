@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core.device import DeviceConfig
 from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
+from repro.core.plan import AnalogPlan, TilePolicy
 from repro.core.tile import TileConfig
 from repro.core.trainer import AnalogTrainer, TrainerConfig
 from repro.data import ImageDataset
@@ -76,7 +77,11 @@ def train_image_model(
     target_loss: float = 0.0,
     hp_overrides: Optional[Dict] = None,
     sp_estimates=None,
+    plan: Optional[AnalogPlan] = None,
 ) -> RunResult:
+    """``plan``: optional AnalogPlan for mixed-policy runs; when omitted a
+    one-policy plan is built from (algorithm, dev_p, dev_w) gated by the
+    convnet's analog filter — the paper's single-device setting."""
     data = data or ImageDataset(n_train=4096, n_test=1024, seed=11)
     ccfg = convnets.ConvNetConfig(kind=model_kind)
     loss_fn = convnets.make_loss_fn(ccfg)
@@ -89,7 +94,11 @@ def train_image_model(
         digital=DigitalOptConfig(kind="sgdm", momentum=0.5),
         schedule=ScheduleConfig(kind="constant", base_lr=lr),
     )
-    trainer = AnalogTrainer(loss_fn, tcfg, convnets.analog_filter)
+    if plan is None:
+        plan = AnalogPlan.of((convnets.analog_filter,
+                              TilePolicy(tile, name=algorithm)),
+                             analog_min_ndim=0)
+    trainer = AnalogTrainer(loss_fn, tcfg, plan=plan)
     params = convnets.init_convnet(jax.random.PRNGKey(seed), ccfg)
     state = trainer.init(jax.random.PRNGKey(seed + 1), params, sp_estimates)
     step_fn = trainer.jit_step()
@@ -119,7 +128,7 @@ def train_image_model(
     from repro.core import algorithms as alg
     from repro.core.trainer import merge_effective
 
-    eff = merge_effective(state["params"], state["tiles"], tile)
+    eff = merge_effective(state["params"], state["tiles"], tile)  # bank policies win
     accs = []
     for b in data.test_batches(256):
         logits = convnets.convnet_logits(eff, jnp.asarray(b["x"]), ccfg)

@@ -1,9 +1,16 @@
-"""End-to-end driver: train a reduced LM with analog E-RIDER tiles for a
-few hundred steps on the synthetic bigram stream, with checkpointing and
+"""End-to-end driver: train a reduced LM on a *mixed* AnalogPlan for a few
+hundred steps on the synthetic bigram stream, with checkpointing and
 fault-tolerance machinery engaged — the same train_step the multi-pod
 dry-run lowers at full scale.
 
-Run: PYTHONPATH=src python examples/lm_analog_training.py [--steps 200]
+The default plan trains attention tiles with RIDER and everything else
+with E-RIDER (embeddings/heads stay digital via ``repro.api.lm_plan``),
+exercising the heterogeneous-device path: two policy-split tile groups,
+each under its own algorithm, in one jitted train_step. Pass a plain
+``--algorithm erider`` for the single-policy setup, or any
+``pattern=algorithm`` list of your own (see repro/launch/train.py).
+
+Run: PYTHONPATH=src python examples/lm_analog_training.py [--steps 500]
 """
 import sys
 
@@ -13,8 +20,9 @@ from repro.launch import train
 def main():
     argv = ["--arch", "qwen2-0.5b", "--smoke", "--steps", "200",
             "--batch", "8", "--seq", "64", "--ckpt-dir", "/tmp/repro_lm_ckpt",
-            "--ckpt-every", "100", "--log-every", "20"]
-    # pass through any user overrides (e.g. --steps 500 --arch mamba2-2.7b)
+            "--ckpt-every", "100", "--log-every", "20",
+            "--algorithm", "attn=rider,**=erider"]
+    # pass through any user overrides (e.g. --steps 500 --algorithm erider)
     argv.extend(sys.argv[1:])
     train.main(argv)
 

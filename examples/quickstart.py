@@ -1,19 +1,23 @@
 """Quickstart: E-RIDER analog training on a toy problem in ~40 lines.
 
-Shows the core API: device config -> tile config -> AnalogTrainer over any
-loss function. The SP-tracking telemetry (sp_err) demonstrates the paper's
-contribution live: Q converges to the device's symmetric point during
-training, with no pre-training calibration.
+Shows the user-facing plan API (``repro.api``): device config -> TilePolicy
+-> AnalogPlan -> AnalogTrainer over any loss function. The SP-tracking
+telemetry (sp_err) demonstrates the paper's contribution live: Q converges
+to the device's symmetric point during training, with no pre-training
+calibration.
+
+For heterogeneous plans (different devices/algorithms per layer) see
+examples/lm_analog_training.py and the AnalogPlan section of the README.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
+from repro.api import AnalogPlan, AnalogTrainer, TilePolicy, TrainerConfig
 from repro.core.device import DeviceConfig
 from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
 from repro.core.tile import TileConfig
-from repro.core.trainer import AnalogTrainer, TrainerConfig
 
 # a noisy least-squares problem: f(W) = 0.5 ||W - W*||^2
 W_STAR = jax.random.normal(jax.random.PRNGKey(1), (32, 32)) * 0.05
@@ -33,13 +37,18 @@ def main():
                          sigma_c2c=0.05, ref_mean=0.3, ref_std=0.2)
     dev_w = DeviceConfig(dw_min=0.01, sigma_pm=0.3, sigma_d2d=0.1,
                          sigma_c2c=0.05)
+    policy = TilePolicy(
+        TileConfig(algorithm="erider", device_p=dev_p, device_w=dev_w,
+                   lr_p=0.5, lr_w=0.5, gamma=0.1, eta=0.3, chopper_p=0.1),
+        name="erider")
+    # every parameter on the E-RIDER policy; add more (pattern, policy)
+    # rules to mix devices/algorithms per path — first match wins
+    plan = AnalogPlan.of(("**", policy))
     cfg = TrainerConfig(
-        tile=TileConfig(algorithm="erider", device_p=dev_p, device_w=dev_w,
-                        lr_p=0.5, lr_w=0.5, gamma=0.1, eta=0.3, chopper_p=0.1),
         digital=DigitalOptConfig(kind="sgd"),
         schedule=ScheduleConfig(kind="constant", base_lr=0.1),
     )
-    trainer = AnalogTrainer(loss_fn, cfg, analog_filter=lambda p, l: True)
+    trainer = AnalogTrainer(loss_fn, cfg, plan=plan)
     state = trainer.init(jax.random.PRNGKey(2), {"w": jnp.zeros((32, 32))})
     step = trainer.jit_step()
 

@@ -1,0 +1,114 @@
+"""repro.api — the user-facing training facade.
+
+One import gives everything needed to train any model on heterogeneous
+analog hardware:
+
+    from repro.api import (AnalogPlan, AnalogTrainer, TilePolicy, DIGITAL,
+                           RERAM_HFO2_RIDER, ECRAM_ERIDER, lm_plan)
+
+    plan = AnalogPlan.of(
+        ("**/wq", RERAM_HFO2_RIDER),     # attention queries: noisy ReRAM + RIDER
+        ("**/mlp/*", ECRAM_ERIDER),      # MLPs: ECRAM + E-RIDER
+        ("re:embed|lm_head", DIGITAL),   # embeddings stay digital
+        default=DIGITAL,
+    )
+    trainer = AnalogTrainer(loss_fn, TrainerConfig(...), plan=plan)
+
+Rules are matched against parameter tree paths in order — the FIRST match
+wins — as globs (``**`` crosses ``/``), ``re:``-prefixed regexes, or
+``(path, leaf) -> bool`` predicates. Each distinct policy keeps its own
+tile stacks: the grouped engine keys groups on (shape, dtype, sharding-rule
+template, policy), so one jitted train_step mixes device presets AND
+algorithms while staying O(distinct structures) in program size.
+
+``lm_plan`` prepends the standard digital exclusions
+(``configs.base.DIGITAL_PATH_PATTERNS``: embeddings / vocab heads /
+positional tables) to your rules — the plan-API successor of
+``default_analog_filter``.
+
+Named policy presets below pair a device preset (core/device.py PRESETS,
+paper Table 3) with the algorithm the paper runs on it; use them directly
+or as templates for ``TilePolicy.of``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import DIGITAL_PATH_PATTERNS
+from repro.core.device import PRESETS, DeviceConfig  # noqa: F401
+from repro.core.plan import (  # noqa: F401
+    DIGITAL, AnalogPlan, TilePolicy, plan_partition, policy_from_json,
+    policy_to_json)
+from repro.core.tile import TileConfig  # noqa: F401
+from repro.core.trainer import AnalogTrainer, TrainerConfig  # noqa: F401
+
+# ---------------------------------------------------------------------------
+# named policy presets: device preset x algorithm pairs from the paper's
+# experiments (Tables 1-2 run RIDER/E-RIDER on the noisy ReRAM presets;
+# the idealized device is the digital-like SGD reference)
+# ---------------------------------------------------------------------------
+
+#: Few-state HfO2 ReRAM (hardest preset) under RIDER (Alg. 2).
+RERAM_HFO2_RIDER = TilePolicy.of("rider", "reram_hfo2", name="reram-hfo2-rider")
+#: Few-state HfO2 ReRAM under E-RIDER (Alg. 3, the headline method).
+RERAM_HFO2_ERIDER = TilePolicy.of("erider", "reram_hfo2", name="reram-hfo2-erider")
+#: ReRAM-OM preset under RIDER.
+RERAM_OM_RIDER = TilePolicy.of("rider", "reram_om", name="reram-om-rider")
+#: ReRAM-OM preset under E-RIDER.
+RERAM_OM_ERIDER = TilePolicy.of("erider", "reram_om", name="reram-om-erider")
+#: ECRAM-style device (~1000 states) under E-RIDER.
+ECRAM_ERIDER = TilePolicy.of("erider", "ecram", name="ecram-erider")
+#: ECRAM-style device under residual learning + ZS (two-stage, Alg. 4).
+ECRAM_RESIDUAL = TilePolicy.of("residual", "ecram", name="ecram-residual")
+#: High-precision softbounds device under TT-v2.
+SOFTBOUNDS_TTV2 = TilePolicy.of("ttv2", "softbounds_2000", name="softbounds-ttv2")
+#: Idealized symmetric device under plain analog SGD (reference).
+IDEAL_SGD = TilePolicy.of("sgd", "ideal", name="ideal-sgd")
+
+
+def lm_plan(*rules, default=DIGITAL, analog_min_ndim: int = 2) -> AnalogPlan:
+    """Standard LM plan: embeddings / vocab heads / positional tables stay
+    digital (DIGITAL_PATH_PATTERNS), then ``rules`` apply in order.
+
+    ``lm_plan(("**", policy))`` reproduces the old
+    ``default_analog_filter`` + single-TileConfig behavior;
+    ``lm_plan(("re:attn", pol_a), ("**", pol_b))`` trains attention and
+    the rest on different stacks.
+    """
+    digital_rules = tuple(
+        (f"re:(?i){pat}", DIGITAL) for pat in DIGITAL_PATH_PATTERNS)
+    return AnalogPlan.of(*digital_rules, *rules, default=default,
+                         analog_min_ndim=analog_min_ndim)
+
+
+def plan_from_spec(spec: str, make_tile_cfg) -> AnalogPlan:
+    """CLI ``--algorithm`` value -> lm_plan (the one parser behind
+    ``repro.launch.{train,dryrun,serve}``).
+
+    ``spec`` is a single algorithm name (one policy on every analog leaf)
+    or a comma-separated list of ``pattern=algorithm`` rules matched in
+    order — globs, ``re:`` regexes, or bare substrings (``"attn"`` means
+    ``"re:attn"``); ``digital`` is a valid algorithm::
+
+        erider
+        attn=rider,**=erider
+        re:mlp/(wi|wg)$=ttv2,wo=rider,**=erider
+
+    ``make_tile_cfg(algorithm)`` builds each named policy's TileConfig.
+    """
+
+    def policy(algo: str) -> TilePolicy:
+        if algo == "digital":
+            return DIGITAL
+        return TilePolicy(make_tile_cfg(algo), name=algo)
+
+    if "=" not in spec:
+        return lm_plan(("**", policy(spec.strip())))
+    rules = []
+    for part in spec.split(","):
+        # tolerate natural spacing ("attn=rider, **=erider"): an unstripped
+        # pattern would compile to a glob that can never match, silently
+        # leaving those layers digital
+        pat, _, algo = (s.strip() for s in part.partition("="))
+        if not any(ch in pat for ch in "*?") and not pat.startswith("re:"):
+            pat = "re:" + pat  # bare name -> substring match
+        rules.append((pat, policy(algo)))
+    return lm_plan(*rules)

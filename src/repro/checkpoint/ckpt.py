@@ -1,9 +1,16 @@
 """Sharded checkpointing with async save, integrity manifest and elastic
 restore (resharding to a different mesh on load).
 
-Format: one directory per step:
+Format (layout v3): one directory per step:
   step_000123/
-    manifest.json   — {path: {shape, dtype, file, crc32}}, step, timestamp
+    manifest.json   — {path: {shape, dtype, file, crc32}}, step, timestamp;
+                      "tile_groups" records, for every TileBank stack, its
+                      member weight-paths in stacking order and the resolved
+                      TilePolicy (devices + algorithm + hyper-parameters)
+                      that trained it — so restore re-keys stacks from the
+                      checkpoint's own layout instead of reconstructing the
+                      order from the restore template, and a checkpoint is
+                      self-describing about the plan that produced it.
     arrays_000.npz  — leaf arrays keyed by their tree path (chunked ~512MB)
 
 Restore takes a *template* pytree (abstract or concrete) and returns arrays
@@ -18,6 +25,7 @@ import json
 import os
 import threading
 import time
+import warnings
 import zlib
 from typing import Any, Dict, Optional
 
@@ -36,11 +44,34 @@ def _flatten(tree) -> Dict[str, Any]:
     }
 
 
+def _tile_group_manifest(tree) -> Dict[str, Any]:
+    """Per-group member paths + resolved policy of every TileBank in
+    ``tree`` (manifest layout v3). Member order IS the stacking order."""
+    from repro.core.plan import policy_to_json
+    from repro.core.tile import TileBank
+
+    out: Dict[str, Any] = {}
+
+    def visit(x):
+        if isinstance(x, TileBank):
+            for g, paths in x.index:
+                pol = x.policy(g)
+                out[g] = {
+                    "members": list(paths),
+                    "policy": policy_to_json(pol) if pol is not None else None,
+                }
+        return None
+
+    jax.tree.map(visit, tree, is_leaf=lambda x: isinstance(x, TileBank))
+    return out
+
+
 def save(tree, directory: str, step: int, *, asynchronous: bool = False) -> Optional[threading.Thread]:
     """Write a checkpoint. With asynchronous=True the device->host copy
     happens immediately but file IO runs on a daemon thread."""
     flat = _flatten(tree)
     host = {k: np.asarray(v) for k, v in flat.items() if v is not None}
+    tile_groups = _tile_group_manifest(tree)
 
     def _write():
         # unique tmp dir: an async save and a final sync save of the same
@@ -49,7 +80,10 @@ def save(tree, directory: str, step: int, *, asynchronous: bool = False) -> Opti
             directory, f".tmp_step_{step:09d}_{os.getpid()}_{threading.get_ident()}")
         final = os.path.join(directory, f"step_{step:09d}")
         os.makedirs(tmp, exist_ok=True)
-        manifest: Dict[str, Any] = {"step": step, "time": time.time(), "arrays": {}}
+        manifest: Dict[str, Any] = {"step": step, "time": time.time(),
+                                    "layout": 3, "arrays": {}}
+        if tile_groups:
+            manifest["tile_groups"] = tile_groups
         chunk_idx, chunk, chunk_bytes = 0, {}, 0
 
         def flush():
@@ -154,13 +188,22 @@ def _bank_member_index(template):
 
 def _legacy_grouped_arr(key, manifest, load_arr, bank_members):
     """Assemble a grouped-layout leaf ``tiles/<group>/<slot>`` missing from
-    the manifest by upgrading either legacy layout:
+    the manifest by upgrading any older layout:
 
     * per-tile (pre-TileBank) checkpoints: stack the group's member tiles
       in group order;
-    * (shape, dtype)-keyed grouped checkpoints (pre-spec-aware keys): the
-      old stack held ALL tiles of that shape/dtype sorted by path — gather
-      the rows belonging to this group's members.
+    * coarser-keyed grouped checkpoints — (shape, dtype)-only stacks
+      (pre-spec-aware keys) or single-policy stacks without the policy tag
+      (pre-AnalogPlan) — gather the rows belonging to this group's members
+      out of the old combined stack. The old stacking order comes from the
+      checkpoint's own ``tile_groups`` member manifest when present
+      (layout v3); only manifests that predate it fall back to
+      reconstructing the order from the restore template's union (which
+      assumes the same model);
+    * any other regrouping a v3 member manifest can describe — e.g. a
+      mixed-plan checkpoint's policy-split stacks restoring into a
+      coarser single-policy template — assembled member by member from
+      each tile's stored (group, row).
 
     Returns None when ``key`` is not a grouped tile leaf.
     """
@@ -171,34 +214,122 @@ def _legacy_grouped_arr(key, manifest, load_arr, bank_members):
     m = re.match(r"^tiles/([^/]+)/(.+)$", key)
     if not m:
         return None
-    parsed = parse_group_name(m.group(1))
+    gname = m.group(1)
+    parsed = parse_group_name(gname)
     if parsed is None:
         return None
-    shape, dtype_name, tag = parsed
+    shape, dtype_name, tag, _ptag = parsed
     slot = m.group(2)
-    members = bank_members.get(m.group(1)) \
+    manifest_groups = manifest.get("tile_groups", {})
+    members = bank_members.get(gname) \
+        or manifest_groups.get(gname, {}).get("members") \
         or _legacy_group_members(manifest, shape, dtype_name, tag)
     if not members:
         return None
     # 1) per-tile legacy layout
     if f"tiles/{members[0]}/{slot}" in manifest["arrays"]:
         return np.stack([load_arr(f"tiles/{p}/{slot}") for p in members])
-    # 2) (shape, dtype)-keyed grouped layout: re-key the old stack. The old
-    # member set is the union of the template's same-(shape, dtype) groups
-    # (same model, regrouped), sorted — the old stacking order.
-    legacy_key = f"tiles/{group_name(shape, dtype_name)}/{slot}"
-    if tag and legacy_key in manifest["arrays"]:
-        union = sorted(
-            p for g, paths in bank_members.items()
-            for p in paths
-            if (parse_group_name(g) or (None, None))[:2]
-            == (shape, dtype_name))
-        old = load_arr(legacy_key)
-        assert old.shape[0] == len(union), (
-            f"legacy group {legacy_key} holds {old.shape[0]} tiles but the "
-            f"restore template names {len(union)}: {union}")
-        return old[[union.index(p) for p in members]]
-    return None
+    # 2) coarser-keyed grouped layouts: re-key the old stack. Candidates,
+    # most specific first: same (shape, dtype, template) without the policy
+    # tag (pre-AnalogPlan single-policy), then (shape, dtype) only (PR-1).
+    candidates = []
+    for cand in (group_name(shape, dtype_name, tag),
+                 group_name(shape, dtype_name)):
+        if cand != gname and cand not in candidates:
+            candidates.append(cand)
+    for src in candidates:
+        if f"tiles/{src}/{slot}" not in manifest["arrays"]:
+            continue
+        old_members = manifest_groups.get(src, {}).get("members")
+        if old_members is None:
+            # pre-v3 manifest: the old member set is the union of the
+            # template's groups that the old key covered (same model,
+            # regrouped), sorted — the old stacking order.
+            sshape, sdt, sttag, _ = parse_group_name(src)
+            old_members = sorted(
+                p for g, paths in bank_members.items()
+                for p in paths
+                if (lambda pg: pg is not None and pg[0] == sshape
+                    and pg[1] == sdt
+                    and (not sttag or pg[2] == sttag))(parse_group_name(g)))
+        if not all(p in old_members for p in members):
+            continue
+        old = load_arr(f"tiles/{src}/{slot}")
+        assert old.shape[0] == len(old_members), (
+            f"legacy group {src} holds {old.shape[0]} tiles but its member "
+            f"list names {len(old_members)}: {old_members}")
+        return old[[old_members.index(p) for p in members]]
+    # 3) cross-plan re-key via the layout-v3 member map: the checkpoint's
+    # own tile_groups manifest names every tile's (group, row), so the
+    # template group can be assembled member by member from ANY regrouping
+    # — e.g. a mixed-plan checkpoint (policy-split stacks) restoring into
+    # a coarser single-policy template merges the split stacks back.
+    path_src: Dict[str, tuple] = {}
+    for src, rec in manifest_groups.items():
+        if f"tiles/{src}/{slot}" not in manifest["arrays"]:
+            continue
+        for row, p2 in enumerate(rec.get("members") or ()):
+            path_src.setdefault(p2, (src, row))
+    if not all(p in path_src for p in members):
+        return None
+    loaded: Dict[str, Any] = {}  # each source stack decompresses ONCE
+    rows = []
+    for p in members:
+        src, row = path_src[p]
+        if src not in loaded:
+            loaded[src] = load_arr(f"tiles/{src}/{slot}")
+        rows.append(loaded[src][row])
+    return np.stack(rows)
+
+
+def _warn_policy_mismatch(template, manifest) -> None:
+    """Warn when a template group's TilePolicy differs from the policy the
+    checkpoint records for it (layout v3 manifests only). Groups absent
+    from the manifest under their own name compare against the coarser
+    legacy key they would re-key from (``_legacy_grouped_arr``'s candidate
+    order), so retraining a single-policy checkpoint under a different
+    mixed plan warns too."""
+    from repro.core.plan import policy_to_json
+    from repro.core.tile import TileBank, group_name, parse_group_name
+
+    stored = manifest.get("tile_groups", {})
+    if not stored:
+        return
+
+    def stored_policies(g):
+        if g in stored:
+            return [stored[g].get("policy")]
+        parsed = parse_group_name(g)
+        if parsed is None:
+            return []
+        shape, dtype_name, tag, _ptag = parsed
+        # coarser source the re-key would read from ...
+        for cand in (group_name(shape, dtype_name, tag),
+                     group_name(shape, dtype_name)):
+            if cand in stored:
+                return [stored[cand].get("policy")]
+        # ... or finer (policy-split) stacks covering the same structure
+        return [rec.get("policy") for g2, rec in stored.items()
+                if (parse_group_name(g2) or (None,) * 3)[:3]
+                == (shape, dtype_name, tag)]
+
+    def visit(x):
+        if isinstance(x, TileBank):
+            for g, _ in x.index:
+                pol = x.policy(g)
+                if pol is None:
+                    continue
+                for rec in stored_policies(g):
+                    if rec is not None and policy_to_json(pol) != rec:
+                        warnings.warn(
+                            f"tile group {g} was trained under policy "
+                            f"{rec.get('name') or rec.get('tag')}; the "
+                            f"restore template resolves it to "
+                            f"{pol.name or pol.tag}",
+                            stacklevel=3)
+        return None
+
+    jax.tree.map(visit, template, is_leaf=lambda x: isinstance(x, TileBank))
 
 
 def restore(template, directory: str, step: Optional[int] = None, *,
@@ -211,9 +342,13 @@ def restore(template, directory: str, step: Optional[int] = None, *,
     Grouped tile state (``tiles/<group>/...`` with a leading stack axis)
     restores from any layout: same-layout checkpoints load directly; legacy
     per-tile checkpoints are upgraded on the fly by stacking their member
-    tiles in group order; legacy (shape, dtype)-keyed stacks (pre-spec-aware
-    group keys) are re-keyed by gathering each new group's member rows out
-    of the old combined stack.
+    tiles in group order; coarser-keyed stacks — (shape, dtype)-only
+    (pre-spec-aware keys) or untagged single-policy stacks (pre-AnalogPlan)
+    — are re-keyed by gathering each new group's member rows out of the old
+    combined stack, using the checkpoint's own ``tile_groups`` member
+    manifest when present. A stored per-group policy that differs from the
+    restore template's policy warns (restoring a checkpoint into a
+    different plan is legal but usually a mistake).
     """
     if step is None:
         step = latest_step(directory)
@@ -221,6 +356,7 @@ def restore(template, directory: str, step: Optional[int] = None, *,
     d = os.path.join(directory, f"step_{step:09d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
+    _warn_policy_mismatch(template, manifest)
     files: Dict[str, Any] = {}
 
     def load_arr(key):

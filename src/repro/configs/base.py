@@ -27,6 +27,13 @@ import jax.numpy as jnp
 
 LAYER_KINDS = ("attn", "attn_local", "mla", "rec", "ssm")
 
+# Parameter-path substrings that stay on the digital optimizer in every
+# analog plan (the paper's setups keep embeddings / vocab heads / positional
+# tables digital — DESIGN.md §5). Consumed by ``repro.api.lm_plan``, which
+# turns each into a leading ``re:`` DIGITAL rule, replacing the old
+# ``default_analog_filter`` predicate.
+DIGITAL_PATH_PATTERNS: Tuple[str, ...] = ("embed", "vocab", "lm_head", "pos")
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:

@@ -4,11 +4,13 @@
   pulse.py       — Analog Update (eq. 2) pulse engine (fused / pulse-train)
   zs.py          — zero-shifting SP calibration (Algorithm 1)
   tile.py        — analog tile state bundle + config
+  plan.py        — AnalogPlan / TilePolicy: per-path policy rules
   algorithms.py  — SGD / TT-v1 / TT-v2 / AGAD / Residual / RIDER / E-RIDER
   digital_opt.py — digital-branch optimizers + LR schedules
   trainer.py     — AnalogTrainer: model <-> tiles wiring, jit train_step
 """
-from . import algorithms, device, digital_opt, pulse, tile, trainer, zs  # noqa: F401
+from . import algorithms, device, digital_opt, plan, pulse, tile, trainer, zs  # noqa: F401
 from .device import PRESETS, DeviceConfig, sample_device, symmetric_point  # noqa: F401
+from .plan import DIGITAL, AnalogPlan, TilePolicy  # noqa: F401
 from .tile import TileConfig, init_tile  # noqa: F401
 from .trainer import AnalogTrainer, TrainerConfig  # noqa: F401

@@ -67,6 +67,13 @@ PRESETS = {
         kind="softbounds", tau_min=1.0, tau_max=1.0, dw_min=0.001,
         sigma_d2d=0.1, sigma_pm=0.3, sigma_c2c=0.05,
     ),
+    # ECRAM-style preset (AIHWKit EcRamPresetDevice analogue): ~1000 states,
+    # milder asymmetry than the ReRAM presets but nonzero write noise —
+    # the "good device" partner in mixed-device plans.
+    "ecram": DeviceConfig(
+        kind="softbounds", tau_min=1.0, tau_max=1.0, dw_min=0.002,
+        sigma_d2d=0.1, sigma_pm=0.25, sigma_c2c=0.15,
+    ),
     # Idealized symmetric device (digital-like reference)
     "ideal": DeviceConfig(
         kind="softbounds", tau_min=10.0, tau_max=10.0, dw_min=1e-6,

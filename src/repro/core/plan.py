@@ -1,0 +1,291 @@
+"""AnalogPlan: per-path policies for heterogeneous devices and algorithms.
+
+The paper's SP behavior is *device-specific* (per-preset dw_min, asymmetry,
+reference error), and the related work trains different layers on different
+tile stacks (multi-tile residual learning; general non-ideal response
+functions). A single global ``TileConfig`` + ``analog_filter`` predicate
+cannot express any of that, so the user-facing training API is built around
+two small immutable objects instead:
+
+``TilePolicy``
+    what one parameter gets: a full ``TileConfig`` (algorithm + device pair
+    + hyper-parameters) or the ``DIGITAL`` sentinel (ordinary digital
+    optimizer path).
+
+``AnalogPlan``
+    an *ordered* list of ``(pattern, policy)`` rules plus a default policy.
+    Patterns are matched against the parameter's tree path in rule order —
+    the FIRST match wins. Three pattern forms are accepted:
+
+      * glob strings — ``"**/wq"``, ``"**/mlp/*"`` (``**`` crosses ``/``,
+        ``*``/``?`` stay within one path segment, matched on the full path),
+      * regex strings — ``"re:attn/(wq|wk)$"`` (``re.search`` semantics),
+      * predicates — ``lambda path, leaf: ...`` (the legacy-shim form).
+
+    Leaves with fewer than ``analog_min_ndim`` dims fall back to DIGITAL
+    even when a rule matches (biases/norms stay digital, as in the paper's
+    setups).
+
+The plan is resolved once per trainer: every analog path gets its policy,
+tiles group on (shape, state-dtype, sharding-rule template, **policy**), and
+each group's vmapped/scanned update graph is built with its own policy's
+``TileConfig`` — the grouped engine stays O(distinct structures) while
+mixing algorithms and device presets freely per group.
+
+The legacy ``AnalogTrainer(loss, cfg, analog_filter)`` constructor maps onto
+a one-rule plan (``legacy_plan``) behind a one-time DeprecationWarning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import re
+import warnings
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .device import PRESETS, DeviceConfig
+from .tile import TileConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePolicy:
+    """One per-path analog policy: a TileConfig, or digital (tile=None).
+
+    ``name`` is an optional stable label; a non-empty name becomes the
+    policy tag used inside tile-group keys and checkpoint manifests (so
+    name your policies when you care about checkpoint key stability across
+    code versions). Unnamed policies hash their config into a 6-hex tag.
+    """
+
+    tile: Optional[TileConfig] = None
+    name: str = ""
+
+    @property
+    def is_digital(self) -> bool:
+        return self.tile is None
+
+    @property
+    def tag(self) -> str:
+        """Short [a-z0-9]+ identifier used in group keys ("" for digital)."""
+        if self.tile is None:
+            return "digital"
+        if self.name:
+            t = re.sub(r"[^a-z0-9]", "", self.name.lower())
+            if t:
+                return t
+        return hashlib.md5(repr(self.tile).encode()).hexdigest()[:6]
+
+    @classmethod
+    def of(cls, algorithm: str = "erider", device_p=None, device_w=None,
+           *, name: str = "", **hyperparams) -> "TilePolicy":
+        """Ergonomic constructor: devices may be DeviceConfigs or preset
+        names from ``repro.core.device.PRESETS``; extra kwargs are
+        TileConfig hyper-parameters (lr_p, eta, chopper_p, ...)."""
+        if algorithm == "digital":
+            return DIGITAL
+
+        def dev(d):
+            return PRESETS[d] if isinstance(d, str) else d
+
+        device_p, device_w = dev(device_p), dev(device_w)
+        if device_w is None:
+            device_w = device_p if device_p is not None else PRESETS["reram_om"]
+        if device_p is None:
+            device_p = device_w
+        return cls(
+            TileConfig(algorithm=algorithm, device_p=device_p,
+                       device_w=device_w, **hyperparams),
+            name or algorithm,
+        )
+
+    def __repr__(self):
+        if self.is_digital:
+            return "TilePolicy(DIGITAL)"
+        return (f"TilePolicy({self.name or self.tag}: {self.tile.algorithm}, "
+                f"dw_min(p)={self.tile.device_p.dw_min})")
+
+
+DIGITAL = TilePolicy(tile=None, name="digital")
+
+
+def _glob_to_re(pattern: str) -> str:
+    """Glob -> anchored regex. ``**/`` optionally crosses directories,
+    ``**`` matches anything, ``*``/``?`` stay within one path segment."""
+    out, i = [], 0
+    while i < len(pattern):
+        c = pattern[i]
+        if pattern.startswith("**/", i):
+            out.append(r"(?:.*/)?")
+            i += 3
+        elif pattern.startswith("**", i):
+            out.append(r".*")
+            i += 2
+        elif c == "*":
+            out.append(r"[^/]*")
+            i += 1
+        elif c == "?":
+            out.append(r"[^/]")
+            i += 1
+        else:
+            out.append(re.escape(c))
+            i += 1
+    return "".join(out)
+
+
+def compile_pattern(pattern) -> Callable[[str, Any], bool]:
+    """Pattern (glob / "re:" regex / predicate) -> (path, leaf) predicate."""
+    if callable(pattern):
+        return pattern
+    if pattern.startswith("re:"):
+        rx = re.compile(pattern[3:])
+        return lambda path, leaf: rx.search(path) is not None
+    rx = re.compile(_glob_to_re(pattern))
+    return lambda path, leaf: rx.fullmatch(path) is not None
+
+
+def _as_policy(p) -> TilePolicy:
+    if isinstance(p, TilePolicy):
+        return p
+    if isinstance(p, TileConfig):
+        return TilePolicy(tile=p)
+    if p == "digital" or p is None:
+        return DIGITAL
+    raise TypeError(f"not a TilePolicy/TileConfig/'digital': {p!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogPlan:
+    """Ordered (pattern, TilePolicy) rules + default; first match wins."""
+
+    rules: Tuple[Tuple[Any, TilePolicy], ...] = ()
+    default: TilePolicy = DIGITAL
+    # rule-matched analog leaves below this rank stay digital anyway
+    # (biases / norm vectors); 0 disables the guard (legacy-shim behavior).
+    analog_min_ndim: int = 2
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "_matchers",
+            tuple((compile_pattern(pat), pol) for pat, pol in self.rules))
+
+    @classmethod
+    def of(cls, *rules, default=DIGITAL, analog_min_ndim: int = 2) -> "AnalogPlan":
+        """``AnalogPlan.of(("**/wq", pol_a), ("**/mlp/*", pol_b))`` —
+        policies may be TilePolicy, TileConfig, or the string "digital"."""
+        return cls(
+            rules=tuple((pat, _as_policy(pol)) for pat, pol in rules),
+            default=_as_policy(default),
+            analog_min_ndim=analog_min_ndim,
+        )
+
+    @classmethod
+    def single(cls, policy, analog_filter=None, analog_min_ndim: int = 2) -> "AnalogPlan":
+        """One policy everywhere (optionally gated by a predicate)."""
+        pat = analog_filter if analog_filter is not None else "**"
+        return cls.of((pat, policy), analog_min_ndim=analog_min_ndim)
+
+    def policy_for(self, path: str, leaf=None) -> TilePolicy:
+        """First matching rule's policy (the plan default otherwise); a
+        too-low-rank leaf is digital regardless. ``leaf=None`` skips the
+        rank guard (used on paths already known to be analog tiles)."""
+        for match, pol in self._matchers:
+            if match(path, leaf):
+                found = pol
+                break
+        else:
+            found = self.default
+        if (not found.is_digital and leaf is not None
+                and getattr(leaf, "ndim", 0) < self.analog_min_ndim):
+            return DIGITAL
+        return found
+
+    def policies(self) -> Tuple[TilePolicy, ...]:
+        out = []
+        for _, pol in self.rules:
+            if pol not in out:
+                out.append(pol)
+        if self.default not in out:
+            out.append(self.default)
+        return tuple(out)
+
+    def __repr__(self):
+        pats = [pat if isinstance(pat, str) else "<predicate>"
+                for pat, _ in self.rules]
+        return f"AnalogPlan({len(self.rules)} rules: {pats}, default={self.default.name})"
+
+
+def plan_partition(params, plan: AnalogPlan):
+    """Split a param tree by plan: (digital tree with None at analog slots,
+    {path: leaf} analog dict, {path: TilePolicy} resolved policies)."""
+    import jax
+
+    from .paths import path_str
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    analog: Dict[str, Any] = {}
+    policies: Dict[str, TilePolicy] = {}
+    dig_leaves = []
+    for kp, leaf in flat:
+        p = path_str(kp)
+        pol = plan.policy_for(p, leaf)
+        if pol.is_digital:
+            dig_leaves.append(leaf)
+        else:
+            analog[p] = leaf
+            policies[p] = pol
+            dig_leaves.append(None)
+    return jax.tree_util.tree_unflatten(treedef, dig_leaves), analog, policies
+
+
+# ---------------------------------------------------------------------------
+# checkpoint serialization of resolved policies (manifest layout v3)
+# ---------------------------------------------------------------------------
+
+
+def policy_to_json(pol: TilePolicy) -> dict:
+    if pol.is_digital:
+        return {"name": pol.name or "digital", "digital": True}
+    d = dataclasses.asdict(pol.tile)
+    d["state_dtype"] = jnp.dtype(pol.tile.state_dtype).name
+    return {"name": pol.name, "tag": pol.tag, "tile": d}
+
+
+def policy_from_json(d: dict) -> TilePolicy:
+    if d.get("digital"):
+        return DIGITAL
+    t = dict(d["tile"])
+    t["device_p"] = DeviceConfig(**t["device_p"])
+    t["device_w"] = DeviceConfig(**t["device_w"])
+    t["state_dtype"] = jnp.dtype(t["state_dtype"]).type
+    return TilePolicy(tile=TileConfig(**t), name=d.get("name", ""))
+
+
+# ---------------------------------------------------------------------------
+# legacy (TileConfig, analog_filter) shim
+# ---------------------------------------------------------------------------
+
+_LEGACY_WARNED = False
+
+
+def _reset_legacy_warning() -> None:
+    """Test hook: re-arm the one-time deprecation warning."""
+    global _LEGACY_WARNED
+    _LEGACY_WARNED = False
+
+
+def legacy_plan(tile: TileConfig, analog_filter) -> AnalogPlan:
+    """Map the deprecated ``(cfg.tile, analog_filter)`` pair onto a one-rule
+    plan, warning once per process."""
+    global _LEGACY_WARNED
+    if not _LEGACY_WARNED:
+        _LEGACY_WARNED = True
+        warnings.warn(
+            "AnalogTrainer(cfg, analog_filter=...) with a single global "
+            "TileConfig is deprecated; pass plan=repro.api.AnalogPlan.of("
+            "(pattern, TilePolicy), ...) instead",
+            DeprecationWarning, stacklevel=3)
+    # min_ndim 0: the legacy predicate alone decided what was analog
+    return AnalogPlan.of((analog_filter, TilePolicy(tile=tile)),
+                         analog_min_ndim=0)

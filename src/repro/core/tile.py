@@ -191,34 +191,42 @@ def expected_pulses(dw, dw_min: float, bl: int = 0):
 # ---------------------------------------------------------------------------
 
 
-def group_name(shape, dtype, tag: str = "") -> str:
-    """Stable group key for all tiles of one (shape, dtype, rule template):
-    "g64x64_float32_nM".
+def group_name(shape, dtype, tag: str = "", ptag: str = "") -> str:
+    """Stable group key for all tiles of one (shape, dtype, rule template,
+    policy): "g64x64_float32_nM_prider".
 
     ``tag`` is the sharding-rule template tag of the member weights
     (``distributed.sharding.template_tag``; e.g. "nM" for attention wq,
     "Mn" for wo) — keying on it keeps stacks from mixing partition rules,
-    so the stacked spec can always carry the members' model axis. An empty
-    tag produces the legacy (shape, dtype)-only key of pre-spec-aware
-    checkpoints. The name is parseable (see ``parse_group_name``) so a
-    checkpoint written in either grouped layout can be matched back against
-    per-tile or re-keyed stacks.
+    so the stacked spec can always carry the members' model axis. ``ptag``
+    is the [a-z0-9]+ TilePolicy tag (``core.plan.TilePolicy.tag``) and is
+    empty for single-policy plans, so single-policy group keys are
+    byte-identical to the pre-AnalogPlan layout. The name is parseable
+    (see ``parse_group_name``) so a checkpoint written in any grouped
+    layout can be matched back against per-tile or re-keyed stacks.
     """
     dims = "x".join(str(int(d)) for d in shape)
     base = f"g{dims}_{jnp.dtype(dtype).name}"
-    return f"{base}_{tag}" if tag else base
+    if tag:
+        base += f"_{tag}"
+    if ptag:
+        base += f"_p{ptag}"
+    return base
 
 
 def parse_group_name(name: str) -> Optional[tuple]:
     """Inverse of ``group_name``:
-    "g64x64_float32_nM" -> ((64, 64), "float32", "nM"), and for legacy
-    keys "g64x64_float32" -> ((64, 64), "float32", ""). Returns None if
+    "g64x64_float32_nM_prider" -> ((64, 64), "float32", "nM", "rider");
+    the template and policy tags are "" for layouts that predate them
+    ("g64x64_float32" -> ((64, 64), "float32", "", "")). Returns None if
     ``name`` is not a group key."""
-    m = re.match(r"^g(\d+(?:x\d+)*)_([A-Za-z0-9]+?)(?:_([MDns]+))?$", name)
+    m = re.match(
+        r"^g(\d+(?:x\d+)*)_([A-Za-z0-9]+?)(?:_([MDns]+))?(?:_p([a-z0-9]+))?$",
+        name)
     if not m:
         return None
     shape = tuple(int(d) for d in m.group(1).split("x"))
-    return shape, m.group(2), m.group(3) or ""
+    return shape, m.group(2), m.group(3) or "", m.group(4) or ""
 
 
 class TileBank:
@@ -235,13 +243,25 @@ class TileBank:
 
     The stack axis is element-local like everything else in a tile, which is
     what makes it the natural ZeRO/scan sharding axis (DESIGN.md §3).
+
+    ``policies`` optionally maps group key -> the TilePolicy every member of
+    that stack resolved to under the trainer's AnalogPlan. It rides in the
+    treedef aux data next to ``index`` (TilePolicy is hashable), so the
+    jitted train_step can build each group's update graph with its own
+    static TileConfig. Banks built without policies (legacy layouts,
+    hand-assembled stacks) fall back to the trainer's default TileConfig.
     """
 
-    def __init__(self, groups: Dict[str, "TileState"], index):
+    def __init__(self, groups: Dict[str, "TileState"], index, policies=None):
         self.groups = dict(groups)
         self.index = tuple((g, tuple(paths)) for g, paths in index)
+        self.policies = dict(policies or {})
         self._where = {p: (g, i) for g, paths in self.index
                        for i, p in enumerate(paths)}
+
+    def policy(self, group: str):
+        """TilePolicy of one stack (None for policy-less legacy banks)."""
+        return self.policies.get(group)
 
     # -- mapping interface over member tiles --------------------------------
     def __len__(self) -> int:
@@ -271,45 +291,73 @@ class TileBank:
 def _tilebank_flatten(bank: TileBank):
     names = tuple(g for g, _ in bank.index)
     return (tuple((jax.tree_util.DictKey(g), bank.groups[g]) for g in names),
-            bank.index)
+            (bank.index, tuple(sorted(bank.policies.items()))))
 
 
 jax.tree_util.register_pytree_with_keys(
     TileBank,
     _tilebank_flatten,
-    lambda index, groups: TileBank(
-        dict(zip((g for g, _ in index), groups)), index),
+    lambda aux, groups: TileBank(
+        dict(zip((g for g, _ in aux[0]), groups)), aux[0], dict(aux[1])),
 )
 
 
-def group_tiles(shapes: Dict[str, tuple], cfg: TileConfig):
+def group_tiles(shapes: Dict[str, tuple], cfg: TileConfig, policies=None):
     """Static grouping: {path: weight shape} -> TileBank index layout.
 
-    Groups key on (shape, dtype, sharding-rule template): two same-shape
-    tiles whose owning weights partition differently (attn/wq's (None, "M")
-    vs attn/wo's ("M", None)) must not share a stack, or the stacked spec
-    would have to replicate the model axis (``grouped_tile_spec``). The
-    template is resolved mesh-independently from the PARAM_RULES table, so
-    the grouping — and with it checkpoint group names — is identical on
-    every mesh, including single-host.
+    Groups key on (shape, state dtype, sharding-rule template, policy):
+
+    * the rule template keeps same-shape tiles whose owning weights
+      partition differently (attn/wq's (None, "M") vs attn/wo's
+      ("M", None)) out of each other's stacks, so the stacked spec can
+      always carry the model axis (``grouped_tile_spec``). The template is
+      resolved mesh-independently from the PARAM_RULES table, so the
+      grouping — and with it checkpoint group names — is identical on
+      every mesh, including single-host.
+    * the policy component (``policies``: {path: TilePolicy}) keeps tiles
+      trained under different AnalogPlan policies apart — each stack has
+      ONE static TileConfig, so the grouped engine mixes algorithms and
+      device presets per group without giving up the O(distinct
+      structures) program size. Single-policy plans omit the tag, keeping
+      group keys byte-identical to the pre-AnalogPlan layout.
     """
     from repro.distributed.sharding import rule_template, template_tag
+
+    multi = policies is not None and len(set(policies.values())) > 1
+    if multi:
+        by_tag: Dict[str, set] = {}
+        for pol in policies.values():
+            by_tag.setdefault(pol.tag, set()).add(pol)
+        clashes = {t: ps for t, ps in by_tag.items() if len(ps) > 1}
+        assert not clashes, (
+            f"distinct TilePolicies share a tag (rename one): {clashes}")
 
     by_group: Dict[str, list] = {}
     for p in sorted(shapes):
         tag = template_tag(rule_template(p, len(shapes[p])))
+        pol = (policies or {}).get(p)
+        dtype = pol.tile.state_dtype if pol is not None else cfg.state_dtype
+        ptag = pol.tag if (multi and pol is not None) else ""
         by_group.setdefault(
-            group_name(shapes[p], cfg.state_dtype, tag), []).append(p)
+            group_name(shapes[p], dtype, tag, ptag), []).append(p)
     return tuple((g, tuple(by_group[g])) for g in sorted(by_group))
 
 
-def stack_tiles(per_tile: Dict[str, "TileState"], index) -> TileBank:
+def group_policies(index, policies) -> Optional[Dict[str, Any]]:
+    """{group: TilePolicy} for a grouping produced by ``group_tiles`` —
+    every member of a group shares one policy by construction."""
+    if not policies:
+        return None
+    return {g: policies[paths[0]] for g, paths in index}
+
+
+def stack_tiles(per_tile: Dict[str, "TileState"], index, policies=None) -> TileBank:
     """Stack per-tile states along a new leading axis, per group."""
     groups = {}
     for g, paths in index:
         groups[g] = jax.tree.map(
             lambda *leaves: jnp.stack(leaves), *(per_tile[p] for p in paths))
-    return TileBank(groups, index)
+    return TileBank(groups, index, policies)
 
 
 def abstract_tile_group(shape, n: int, cfg: TileConfig) -> "TileState":

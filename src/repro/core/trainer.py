@@ -1,7 +1,8 @@
 """AnalogTrainer: wires any JAX model to the analog tile algorithms.
 
-Given a loss function over a parameter pytree and a predicate selecting
-which leaves live on analog tiles, builds pure jit-able ``init`` /
+Given a loss function over a parameter pytree and an ``AnalogPlan``
+(ordered path rules -> TilePolicy; see core/plan.py) deciding which leaves
+live on which analog tile stacks, builds pure jit-able ``init`` /
 ``train_step`` functions:
 
   1. ``begin_step`` phase (chopper draw / Q-tilde sync, Alg.3 l.3-6)
@@ -10,15 +11,22 @@ which leaves live on analog tiles, builds pure jit-able ``init`` /
   3. digital leaves -> SGD/Adam; analog leaves -> pulse-based tile update
 
 Tiles are stored shape-grouped (TileBank): all tiles of one (shape, dtype,
-sharding-rule template) stack along a leading axis and phases 1/3b run as
-ONE vmapped instance per group; groups with identical stacked structure
+sharding-rule template, policy) stack along a leading axis and phases 1/3b
+run as ONE vmapped instance per group — each group's graph built with its
+own policy's static TileConfig, so one train_step mixes algorithms and
+device presets freely; groups with identical stacked structure AND policy
 (same member shape/count/dtype, e.g. the wq-family and wo-family of a
 uniform transformer) additionally share one ``jax.lax.scan``'ed graph, so
 the jitted train_step stays O(distinct structures) — O(1) in depth — not
 O(layers). ``TrainerConfig(engine="looped")`` keeps the legacy per-tile
 dict layout and Python loop as a reference baseline;
 ``TrainerConfig(scan_groups=False)`` unrolls the groups (bit-identical to
-the scanned path — same per-group fold_in keys).
+the scanned path — same per-group keys).
+
+Per-tile/per-group RNG keys fold in a CRC of the tile path (init, looped
+engine) or of the group's member-path tuple (grouped engine) — NOT an
+enumeration index — so a model trained under a mixed plan is bit-identical
+to the same tiles trained side by side in separate single-policy trainers.
 
 The same train_step is used single-host and under GSPMD (the dry-run lowers
 it with sharded in/out specs; gradients reduce over the data axes before
@@ -31,16 +39,28 @@ jax 0.4.x (see distributed/sharding.py).
 from __future__ import annotations
 
 import dataclasses
+import logging
+import zlib
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import algorithms as alg
 from .digital_opt import DigitalOptConfig, ScheduleConfig, apply_opt, init_opt, lr_at
 from .paths import path_str
+from .plan import AnalogPlan, TilePolicy, legacy_plan, plan_partition
 from .tile import (TileBank, TileConfig, abstract_tile, abstract_tile_group,
-                   group_tiles, init_tile, stack_tiles)
+                   group_policies, group_tiles, init_tile, stack_tiles)
+
+logger = logging.getLogger("repro.plan")
+
+
+def _crc_fold(key, name: str):
+    """Fold a stable CRC of ``name`` into ``key`` — path-content keyed RNG
+    (independent of enumeration order / co-trained tiles)."""
+    return jax.random.fold_in(key, np.uint32(zlib.crc32(name.encode())))
 
 PathPredicate = Callable[[str, Any], bool]
 LossFn = Callable[[Any, Any, jax.Array], Tuple[jax.Array, Dict[str, jax.Array]]]
@@ -99,25 +119,35 @@ def partition_params(params, analog_filter: PathPredicate):
     return digital, analog
 
 
-def effective_weights(tiles, tcfg: TileConfig) -> Dict[str, jax.Array]:
+def _group_tile_cfg(bank: TileBank, group: str, default: TileConfig) -> TileConfig:
+    pol = bank.policy(group)
+    return pol.tile if (pol is not None and pol.tile is not None) else default
+
+
+def effective_weights(tiles, tcfg: TileConfig, policies=None) -> Dict[str, jax.Array]:
     """{path: model-space effective weight} for a TileBank (one vmapped
-    effective_weight per shape group) or a legacy per-tile dict."""
+    effective_weight per group, under that group's policy TileConfig) or a
+    legacy per-tile dict (``policies``: optional {path: TileConfig})."""
     if isinstance(tiles, TileBank):
         out = {}
         for g, paths in tiles.index:
-            eff = jax.vmap(lambda ts: alg.effective_weight(ts, tcfg))(
+            gcfg = _group_tile_cfg(tiles, g, tcfg)
+            eff = jax.vmap(lambda ts: alg.effective_weight(ts, gcfg))(
                 tiles.groups[g])
             for i, p in enumerate(paths):
                 out[p] = eff[i]
         return out
-    return {p: alg.effective_weight(ts, tcfg) for p, ts in tiles.items()}
+    policies = policies or {}
+    return {p: alg.effective_weight(ts, policies.get(p, tcfg))
+            for p, ts in tiles.items()}
 
 
-def merge_effective(digital, tiles, tcfg: TileConfig):
+def merge_effective(digital, tiles, tcfg: TileConfig, policies=None):
     """Rebuild the full parameter tree with analog leaves replaced by
-    their effective (model-space) weights. ``tiles`` is a TileBank or a
-    legacy {path: TileState} dict."""
-    eff = effective_weights(tiles, tcfg)
+    their effective (model-space) weights. ``tiles`` is a TileBank (whose
+    per-group policies win over ``tcfg``) or a legacy {path: TileState}
+    dict."""
+    eff = effective_weights(tiles, tcfg, policies)
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         digital, is_leaf=lambda x: x is None
     )
@@ -164,16 +194,20 @@ jax.tree_util.register_pytree_with_keys(
 def _scan_classes(bank: TileBank):
     """Same-structure classes of tile groups.
 
-    Groups whose stacked states have identical treedef and leaf
-    shapes/dtypes — e.g. the wq-family and wo-family stacks of a uniform
+    Groups whose stacked states have identical treedef, leaf shapes/dtypes
+    AND TilePolicy — e.g. the wq-family and wo-family stacks of a uniform
     transformer, distinct groups only by sharding-rule tag — can share one
     lax.scan'ed copy of the tile graph instead of one unrolled vmap each.
-    Returns a list of tuples of group indices into ``bank.index``.
+    The policy is part of the signature because each scanned class runs
+    under ONE static TileConfig — groups with different policies must keep
+    their own graphs. Returns a list of tuples of group indices into
+    ``bank.index``.
     """
     classes: Dict[Any, list] = {}
     for gi, (g, _) in enumerate(bank.index):
         leaves, treedef = jax.tree_util.tree_flatten(bank.groups[g])
-        sig = (treedef, tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+        sig = (treedef, tuple((tuple(l.shape), str(l.dtype)) for l in leaves),
+               bank.policy(g))
         classes.setdefault(sig, []).append(gi)
     return [tuple(v) for v in classes.values()]
 
@@ -183,18 +217,75 @@ class AnalogTrainer:
         self,
         loss_fn: LossFn,
         cfg: TrainerConfig,
-        analog_filter: PathPredicate = default_analog_filter,
+        analog_filter: Optional[PathPredicate] = None,
         mesh=None,
+        *,
+        plan: Optional[AnalogPlan] = None,
     ):
-        """``mesh``: optional jax.sharding.Mesh. When set, the grouped tile
+        """``plan``: an AnalogPlan mapping parameter paths to TilePolicies
+        (heterogeneous devices/algorithms per path; see core/plan.py and
+        the ``repro.api`` facade). When omitted, the deprecated
+        ``(cfg.tile, analog_filter)`` pair is mapped onto a one-rule plan
+        behind a one-time DeprecationWarning.
+
+        ``mesh``: optional jax.sharding.Mesh. When set, the grouped tile
         phases run under explicit in/out specs (stack dim on the ZeRO/data
         axes, member dims on the model axis per the owning weight's rule);
         when None, layout is left to GSPMD propagation from the caller's
         in_shardings."""
         self.loss_fn = loss_fn
         self.cfg = cfg
+        if plan is None:
+            plan = legacy_plan(cfg.tile, analog_filter or default_analog_filter)
+        elif analog_filter is not None:
+            raise ValueError("pass either plan= or analog_filter=, not both")
+        self.plan = plan
         self.analog_filter = analog_filter
         self.mesh = mesh
+        # {path: TileConfig} resolved against real leaves by init /
+        # abstract_state — the looped engine's policy source (the grouped
+        # engine carries policies in the TileBank treedef instead)
+        self._path_tile_cfgs: Dict[str, TileConfig] = {}
+
+    def _remember_path_cfgs(self, analog, policies) -> None:
+        self._path_tile_cfgs.update(
+            {p: (policies[p].tile or self.cfg.tile) for p in analog})
+
+    def _tile_cfg_of(self, path: str) -> TileConfig:
+        """Static TileConfig of one analog path (looped engine): resolved
+        with the leaf at init/abstract_state time when possible (rank
+        guards and legacy predicates need the leaf). Paths never seen by
+        init — e.g. a restored state stepped without one — re-resolve
+        leafless; a rule the plan cannot evaluate without a leaf falls
+        back to the trainer default, which is exactly the legacy
+        single-policy behavior."""
+        cfg = self._path_tile_cfgs.get(path)
+        if cfg is not None:
+            return cfg
+        try:
+            pol = self.plan.policy_for(path)
+        except Exception:  # leaf-dependent legacy predicate
+            return self.cfg.tile
+        return pol.tile if (pol is not None and pol.tile is not None) \
+            else self.cfg.tile
+
+    def describe_plan(self, params) -> str:
+        """One-line plan summary: ``N analog paths -> K groups, algorithms
+        {...}, M digital leaves``. Works on abstract params."""
+        digital, analog, policies = plan_partition(params, self.plan)
+        index = group_tiles({p: analog[p].shape for p in analog},
+                            self.cfg.tile, policies)
+        pols = group_policies(index, policies) or {}
+        algos: Dict[str, int] = {}
+        for g, paths in index:
+            pol = pols.get(g)
+            a = pol.tile.algorithm if pol is not None else self.cfg.tile.algorithm
+            algos[a] = algos.get(a, 0) + len(paths)
+        n_dig = sum(leaf is not None for leaf in jax.tree.leaves(
+            digital, is_leaf=lambda x: x is None))
+        algos_s = "{" + ", ".join(f"{a}: {n}" for a, n in sorted(algos.items())) + "}"
+        return (f"plan: {len(analog)} analog paths -> {len(index)} groups, "
+                f"algorithms {algos_s}, {n_dig} digital leaves")
 
     def _constrain(self, tree, member_paths, prefix: int = 0):
         if self.mesh is None:
@@ -204,40 +295,47 @@ class AnalogTrainer:
         return shd.constrain_stacked(tree, member_paths, self.mesh,
                                      prefix=prefix)
 
-    def _grouped_apply(self, bank: TileBank, fn, key, extras=()):
-        """One vmapped ``fn`` instance per tile group, scanned per class.
+    def _grouped_apply(self, bank: TileBank, make_fn, key, extras=()):
+        """One vmapped instance per tile group, scanned per class.
 
-        ``fn(tile_state, key, *extra)`` operates on a single tile; it is
-        vmapped over each group's stack, and same-structure classes of
-        groups (``_scan_classes``) additionally run under one jax.lax.scan,
-        so the jitted program holds one copy of the tile graph per class
-        instead of per group. Per-group keys fold the group's index
-        position exactly like the unrolled engine, so scanning is
-        bit-identical to unrolling. With a mesh, stacks are pinned to
-        explicit specs: shard_map over the stack axis where available
-        (jax >= 0.6, element-local fn), with_sharding_constraint + GSPMD
-        otherwise (jax 0.4.x).
+        ``make_fn(tcfg)`` returns the per-tile function
+        ``fn(tile_state, key, *extra)`` specialized to one group's static
+        TileConfig (the group's TilePolicy under a mixed plan, the trainer
+        default otherwise); it is vmapped over each group's stack, and
+        same-structure same-policy classes of groups (``_scan_classes``)
+        additionally run under one jax.lax.scan, so the jitted program
+        holds one copy of the tile graph per (class, policy) instead of
+        per group. Per-group keys fold a CRC of the group's member-path
+        tuple — identical between the scanned and unrolled engines (bit-
+        identical results) and independent of which other groups co-train
+        (mixed-plan runs match side-by-side single-policy runs bit for
+        bit). With a mesh, stacks are pinned to explicit specs: shard_map
+        over the stack axis where available (jax >= 0.6, element-local
+        fn), with_sharding_constraint + GSPMD otherwise (jax 0.4.x).
 
         extras: {group-name: stacked array} pytrees of per-group inputs
         (analog gradients). Returns {group-name: vmapped fn output}.
         """
         index = bank.index
-        vfn = jax.vmap(
-            lambda ts, kr, *ex: fn(ts, jax.random.wrap_key_data(kr), *ex))
 
-        def keys_raw(gi, n):
-            return jax.random.key_data(
-                jax.random.split(jax.random.fold_in(key, gi), n))
+        def vfn_for(g):
+            fn = make_fn(_group_tile_cfg(bank, g, self.cfg.tile))
+            return jax.vmap(
+                lambda ts, kr, *ex: fn(ts, jax.random.wrap_key_data(kr), *ex))
+
+        def keys_raw(paths):
+            kg = _crc_fold(key, "|".join(paths))
+            return jax.random.key_data(jax.random.split(kg, len(paths)))
 
         classes = (_scan_classes(bank) if self.cfg.scan_groups
                    else [(gi,) for gi in range(len(index))])
         out = {}
         for cls in classes:
+            vfn = vfn_for(index[cls[0]][0])
             if len(cls) == 1:
-                gi = cls[0]
-                g, paths = index[gi]
+                g, paths = index[cls[0]]
                 args = (self._constrain(bank.groups[g], paths),
-                        keys_raw(gi, len(paths))) + tuple(
+                        keys_raw(paths)) + tuple(
                             self._constrain(e[g], paths) for e in extras)
                 res = None
                 if self.mesh is not None:
@@ -254,8 +352,7 @@ class AnalogTrainer:
                 stacked = jax.tree.map(
                     lambda *ls: jnp.stack(ls),
                     *(bank.groups[g] for g in names))
-                kr = jnp.stack(
-                    [keys_raw(gi, len(index[gi][1])) for gi in cls])
+                kr = jnp.stack([keys_raw(index[gi][1]) for gi in cls])
                 ex = [jnp.stack([e[g] for g in names]) for e in extras]
                 stacked = self._constrain(stacked, paths_list, prefix=1)
                 ex = [self._constrain(x, paths_list, prefix=1) for x in ex]
@@ -272,15 +369,19 @@ class AnalogTrainer:
 
     # -- state ------------------------------------------------------------
     def init(self, key, params, sp_estimates: Optional[Dict[str, Any]] = None) -> TrainState:
-        digital, analog = partition_params(params, self.analog_filter)
+        digital, analog, policies = plan_partition(params, self.plan)
+        self._remember_path_cfgs(analog, policies)
+        logger.info(self.describe_plan(params))
         per_tile = {}
-        for i, (p, w0) in enumerate(sorted(analog.items())):
+        for p, w0 in sorted(analog.items()):
             sp = (sp_estimates or {}).get(p)
-            per_tile[p] = init_tile(jax.random.fold_in(key, i), w0, self.cfg.tile, sp)
+            per_tile[p] = init_tile(_crc_fold(key, p), w0,
+                                    policies[p].tile or self.cfg.tile, sp)
         if self.cfg.engine == "grouped":
             index = group_tiles({p: w.shape for p, w in analog.items()},
-                                self.cfg.tile)
-            tiles = stack_tiles(per_tile, index)
+                                self.cfg.tile, policies)
+            tiles = stack_tiles(per_tile, index,
+                                group_policies(index, policies))
         else:
             tiles = per_tile
         return TrainState(
@@ -293,18 +394,22 @@ class AnalogTrainer:
 
     def abstract_state(self, params_shapes) -> TrainState:
         """ShapeDtypeStruct state (dry-run lowering; no allocation)."""
-        digital, analog = partition_params(params_shapes, self.analog_filter)
+        digital, analog, policies = plan_partition(params_shapes, self.plan)
+        self._remember_path_cfgs(analog, policies)
         if self.cfg.engine == "grouped":
             index = group_tiles({p: w.shape for p, w in analog.items()},
-                                self.cfg.tile)
+                                self.cfg.tile, policies)
+            pols = group_policies(index, policies)
             tiles = TileBank(
-                {g: abstract_tile_group(analog[paths[0]].shape, len(paths),
-                                        self.cfg.tile)
+                {g: abstract_tile_group(
+                    analog[paths[0]].shape, len(paths),
+                    (pols or {}).get(g, TilePolicy(self.cfg.tile)).tile)
                  for g, paths in index},
                 index,
+                pols,
             )
         else:
-            tiles = {p: abstract_tile(w.shape, self.cfg.tile)
+            tiles = {p: abstract_tile(w.shape, policies[p].tile or self.cfg.tile)
                      for p, w in sorted(analog.items())}
         opt = init_opt(
             jax.tree.map(lambda s: None if s is None else jax.ShapeDtypeStruct(s.shape, jnp.float32),
@@ -327,21 +432,26 @@ class AnalogTrainer:
         grouped = isinstance(state["tiles"], TileBank)
 
         # phase 1: chopper / Q-tilde sync — one vmapped begin_step per
-        # group, scanned per same-structure class (grouped engine), or one
-        # per tile (legacy looped engine)
+        # group under the group's policy TileConfig, scanned per
+        # same-structure same-policy class (grouped engine), or one per
+        # tile (legacy looped engine)
         if grouped:
             bank: TileBank = state["tiles"]
             begun = self._grouped_apply(
-                bank, lambda ts, k: alg.begin_step(ts, k, tcfg), k_begin)
-            tiles = TileBank(begun, bank.index)
+                bank,
+                lambda gcfg: (lambda ts, k: alg.begin_step(ts, k, gcfg)),
+                k_begin)
+            tiles = TileBank(begun, bank.index, bank.policies)
+            path_cfgs = None
         else:
+            path_cfgs = {p: self._tile_cfg_of(p) for p in state["tiles"]}
             tiles = {
-                p: alg.begin_step(ts, jax.random.fold_in(k_begin, i), tcfg)
-                for i, (p, ts) in enumerate(sorted(state["tiles"].items()))
+                p: alg.begin_step(ts, _crc_fold(k_begin, p), path_cfgs[p])
+                for p, ts in sorted(state["tiles"].items())
             }
 
         # phase 2: fwd/bwd on effective weights (with grad accumulation)
-        eff = merge_effective(state["params"], tiles, tcfg)
+        eff = merge_effective(state["params"], tiles, tcfg, path_cfgs)
         mb = self.cfg.microbatch
         if mb <= 1:
             (loss, aux), grads = jax.value_and_grad(self.loss_fn, has_aux=True)(
@@ -397,21 +507,26 @@ class AnalogTrainer:
             stacked_grads = {g: jnp.stack([agrads[p] for p in paths])
                              for g, paths in tiles.index}
             res = self._grouped_apply(
-                tiles, lambda ts, k, grd: alg.update(ts, grd, k, tcfg, lr),
+                tiles,
+                lambda gcfg: (
+                    lambda ts, k, grd: alg.update(ts, grd, k, gcfg, lr)),
                 k_upd, extras=(stacked_grads,))
             new_tiles = TileBank({g: res[g][0] for g, _ in tiles.index},
-                                 tiles.index)
+                                 tiles.index, tiles.policies)
             tile_metrics = [res[g][1] for g, _ in tiles.index]
         else:
             new_tiles = {}
-            for i, (p, ts) in enumerate(sorted(tiles.items())):
-                ts2, m = alg.update(ts, agrads[p], jax.random.fold_in(k_upd, i), tcfg, lr)
+            for p, ts in sorted(tiles.items()):
+                ts2, m = alg.update(ts, agrads[p], _crc_fold(k_upd, p),
+                                    path_cfgs[p], lr)
                 new_tiles[p] = ts2
                 tile_metrics.append(m)
 
         metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm, **aux}
         if tile_metrics:
-            keys = tile_metrics[0].keys()
+            # mixed plans: metric key sets differ per algorithm — aggregate
+            # the union over whichever groups emit each key
+            keys = sorted({k for m in tile_metrics for k in m})
             for k in keys:
                 vals = jnp.concatenate(
                     [jnp.atleast_1d(m[k]) for m in tile_metrics if k in m])

@@ -24,11 +24,12 @@ from typing import Optional  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro import api  # noqa: E402
 from repro.configs import SHAPES, ARCHS, get_config, input_specs, shape_applicable  # noqa: E402
 from repro.core.device import DeviceConfig  # noqa: E402
 from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig  # noqa: E402
 from repro.core.tile import TileConfig  # noqa: E402
-from repro.core.trainer import AnalogTrainer, TrainerConfig, default_analog_filter  # noqa: E402
+from repro.core.trainer import AnalogTrainer, TrainerConfig  # noqa: E402
 from repro.distributed import sharding  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models.common import set_shard_rules  # noqa: E402
@@ -70,19 +71,27 @@ def make_tile_cfg(algorithm: str = "erider") -> TileConfig:
     )
 
 
+def make_plan(algorithm: str = "erider") -> api.AnalogPlan:
+    """LM-scale AnalogPlan. ``algorithm`` is a single name or a
+    comma-separated ``pattern=algorithm`` mixed plan (globs / ``re:``
+    regexes / bare substrings), e.g. "attn=rider,**=erider" — parsed by
+    ``api.plan_from_spec`` with the dry-run's LM-scale TileConfigs."""
+    return api.plan_from_spec(algorithm, make_tile_cfg)
+
+
 def make_trainer(model: LM, arch: str, algorithm: str, dsize: int,
                  tile_engine: str = "grouped", mesh=None) -> AnalogTrainer:
     mb = MICROBATCH.get(arch, 2)
     mb = max(1, min(mb, 256 // dsize))
     tcfg = TrainerConfig(
-        tile=make_tile_cfg(algorithm),
         digital=DigitalOptConfig(kind="sgdm", clip_norm=0.0),
         schedule=ScheduleConfig(kind="cosine", base_lr=0.1, total_steps=10000),
         microbatch=mb,
         accum_dtype=jnp.bfloat16,
         engine=tile_engine,
     )
-    return AnalogTrainer(model.loss, tcfg, default_analog_filter, mesh=mesh)
+    return AnalogTrainer(model.loss, tcfg, plan=make_plan(algorithm),
+                         mesh=mesh)
 
 
 # perf-iteration options (see EXPERIMENTS.md §Perf):
@@ -98,7 +107,9 @@ DEFAULT_OPTS = dict(zero_tiles=True, moe_impl=None, remat=None,
 
 def build_cell(arch: str, shape_name: str, mesh, *, algorithm: str = "erider",
                opts=None):
-    """Returns (lower_fn, model_flops) for one cell; lower_fn() -> Lowered."""
+    """Returns (lower_fn, model_flops, plan_line) for one cell;
+    lower_fn() -> Lowered. plan_line is the trainer's one-line AnalogPlan
+    summary (None for prefill/decode cells)."""
     import dataclasses as _dc
 
     o = dict(DEFAULT_OPTS, **(opts or {}))
@@ -138,7 +149,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, algorithm: str = "erider",
                          donate_argnums=(0,))
             return fn.lower(astate, batch_specs)
 
-        return lower, mflops
+        return lower, mflops, trainer.describe_plan(aparams)
 
     p_sh = sharding.params_shardings(aparams, mesh)
 
@@ -153,7 +164,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, algorithm: str = "erider",
             fn = jax.jit(model.prefill, in_shardings=in_sh, donate_argnums=(2,))
             return fn.lower(aparams, batch_specs, acache)
 
-        return lower, mflops
+        return lower, mflops, None
 
     # decode: serve_step(params, token, cache, pos)
     enc_len = min(spec.seq_len, 32768) if cfg.is_encdec else 0
@@ -168,7 +179,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, algorithm: str = "erider",
         fn = jax.jit(model.serve_step, in_shardings=in_sh, donate_argnums=(2,))
         return fn.lower(aparams, tok, acache, pos)
 
-    return lower, mflops
+    return lower, mflops, None
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
@@ -194,8 +205,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
     chips = mesh.size
     try:
         t0 = time.time()
-        lower_fn, mflops = build_cell(arch, shape_name, mesh,
-                                      algorithm=algorithm, opts=opts)
+        lower_fn, mflops, plan_line = build_cell(arch, shape_name, mesh,
+                                                 algorithm=algorithm,
+                                                 opts=opts)
+        if plan_line:
+            result["plan"] = plan_line
+            print(f"[dryrun] {cell_id}: {plan_line}", flush=True)
         with mesh:
             lowered = lower_fn()
             t_lower = time.time() - t0

@@ -5,9 +5,16 @@ to the *deployed* weights (effective analog weights + optional IO-quantized
 MVMs), which is the paper's deployment story: a model trained with E-RIDER
 serves from the same analog arrays.
 
+With ``--ckpt-dir`` the driver restores an analog TrainState written by
+``repro.launch.train`` (``--algorithm`` must name the same plan the
+checkpoint was trained under — single or mixed ``pattern=algorithm``
+form) and serves the *effective* analog weights, per-group under each
+stack's own TilePolicy.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --requests 16 --prompt-len 32 --gen 32
+      --requests 16 --prompt-len 32 --gen 32 \
+      [--ckpt-dir /tmp/ckpt --algorithm erider]
 """
 from __future__ import annotations
 
@@ -23,6 +30,33 @@ from repro.data import BigramLM
 from repro.models.lm import LM
 
 
+def _restore_effective_params(model: LM, args):
+    """Rebuild the training-time plan, restore the checkpoint through the
+    (re-keying) elastic restore path, and merge effective analog weights.
+
+    The restore template is built with ``abstract_state`` from
+    ``eval_shape``'d params — no throwaway tile/optimizer state is ever
+    materialized (at LM scale trainer.init would allocate several times
+    the served weights just to be overwritten)."""
+    from repro.checkpoint import ckpt
+    from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
+    from repro.core.trainer import AnalogTrainer, TrainerConfig, merge_effective
+    from repro.launch.train import make_plan
+
+    plan = make_plan(args.algorithm, args.smoke)
+    trainer = AnalogTrainer(
+        model.loss,
+        TrainerConfig(digital=DigitalOptConfig(kind="sgdm"),
+                      schedule=ScheduleConfig(kind="constant", base_lr=0.0)),
+        plan=plan)
+    aparams = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    template = trainer.abstract_state(aparams)
+    state = ckpt.restore(template, args.ckpt_dir)
+    print(f"[serve] restored step {int(np.asarray(state['step']))} from "
+          f"{args.ckpt_dir} | {trainer.describe_plan(aparams)}", flush=True)
+    return merge_effective(state["params"], state["tiles"], trainer.cfg.tile)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen2-0.5b")
@@ -31,11 +65,19 @@ def main(argv=None) -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default="",
+                    help="serve effective analog weights from this "
+                         "repro.launch.train checkpoint")
+    ap.add_argument("--algorithm", default="erider",
+                    help="plan of the checkpoint (see repro.launch.train)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = LM(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        params = _restore_effective_params(model, args)
+    else:
+        params = model.init(jax.random.PRNGKey(0))
     data = BigramLM(vocab=cfg.vocab, seed=3)
 
     prefill = jax.jit(model.prefill, donate_argnums=(2,))

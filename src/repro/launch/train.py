@@ -6,6 +6,15 @@ examples/lm_analog_training.py); on a real fleet the same driver runs the
 full configs — the mesh factory, sharding rules and train_step are exactly
 the ones the multi-pod dry-run lowers.
 
+``--algorithm`` takes either a single algorithm name (one policy on every
+analog leaf) or a comma-separated mixed plan of ``pattern=algorithm`` rules
+matched in order (globs, ``re:`` regexes, or bare substrings;
+``digital`` is a valid algorithm):
+
+  --algorithm erider
+  --algorithm "attn=rider,**=erider"
+  --algorithm "re:mlp/(wi|wg)$=ttv2,wo=rider,**=erider"
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
       --steps 100 --algorithm erider --ckpt-dir /tmp/ckpt
@@ -21,11 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import ARCHS, get_config
 from repro.core.device import DeviceConfig
 from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
 from repro.core.tile import TileConfig
-from repro.core.trainer import AnalogTrainer, TrainerConfig, default_analog_filter
+from repro.core.trainer import AnalogTrainer, TrainerConfig
 from repro.checkpoint import ckpt
 from repro.data import BigramLM, Prefetcher
 from repro.distributed import sharding
@@ -47,6 +57,11 @@ def make_tile_cfg(algorithm: str, smoke: bool) -> TileConfig:
         store_device=smoke, rng="threefry" if smoke else "hash",
         lr_p=0.5, lr_w=0.05, gamma=0.1, eta=0.5, chopper_p=0.05,
     )
+
+
+def make_plan(algorithm: str, smoke: bool) -> api.AnalogPlan:
+    """CLI ``--algorithm`` value -> AnalogPlan (see api.plan_from_spec)."""
+    return api.plan_from_spec(algorithm, lambda a: make_tile_cfg(a, smoke))
 
 
 def main(argv=None) -> None:
@@ -71,17 +86,18 @@ def main(argv=None) -> None:
     mesh = make_host_mesh(args.data_parallel, args.model_parallel)
     set_shard_rules(sharding.logical_rules(mesh))
 
+    plan = make_plan(args.algorithm, args.smoke)
     tcfg = TrainerConfig(
-        tile=make_tile_cfg(args.algorithm, args.smoke),
         digital=DigitalOptConfig(kind="sgdm", clip_norm=1.0),
         schedule=ScheduleConfig(kind="cosine", base_lr=args.lr,
                                 total_steps=args.steps, warmup_steps=min(20, args.steps // 5)),
     )
-    trainer = AnalogTrainer(model.loss, tcfg, default_analog_filter,
+    trainer = AnalogTrainer(model.loss, tcfg, plan=plan,
                             mesh=mesh if mesh.size > 1 else None)
 
     key = jax.random.PRNGKey(0)
     params = model.init(key)
+    print(f"[train] {trainer.describe_plan(params)}", flush=True)
     state = trainer.init(jax.random.PRNGKey(1), params)
 
     start_step = 0

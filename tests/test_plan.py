@@ -1,0 +1,342 @@
+"""AnalogPlan / TilePolicy tests: per-path policy resolution, the mixed-
+policy grouped engine, the legacy (TileConfig, analog_filter) shim, and the
+layout-v3 checkpoint manifest (member paths + resolved policies).
+
+Acceptance criteria covered here:
+  * one AnalogTrainer trains >= 2 distinct policies (different device
+    presets AND algorithms) bit-identically to side-by-side single-policy
+    trainers;
+  * a legacy single-policy checkpoint restores through the re-key path
+    into a mixed-plan template;
+  * the legacy constructor still works behind a deprecation warning,
+    raised exactly once per process.
+"""
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import DIGITAL, AnalogPlan, TilePolicy, lm_plan
+from repro.checkpoint import ckpt
+from repro.core.device import DeviceConfig
+from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
+from repro.core.plan import (_reset_legacy_warning, policy_from_json,
+                             policy_to_json)
+from repro.core.tile import TileBank, TileConfig, group_tiles
+from repro.core.trainer import AnalogTrainer, TrainerConfig
+
+DEV_A = DeviceConfig(dw_min=0.01, sigma_pm=0.3, sigma_d2d=0.1, sigma_c2c=0.05)
+DEV_B = DeviceConfig(dw_min=0.02, sigma_pm=0.5, sigma_d2d=0.1, sigma_c2c=0.1,
+                     ref_mean=0.1, ref_std=0.1)
+
+# two *distinct* policies: different device presets AND algorithms
+POL_A = TilePolicy(TileConfig(algorithm="erider", device_p=DEV_A,
+                              device_w=DEV_A, lr_p=0.5, lr_w=0.5, gamma=0.1,
+                              eta=0.1, chopper_p=0.1), name="pola")
+POL_B = TilePolicy(TileConfig(algorithm="rider", device_p=DEV_B,
+                              device_w=DEV_A, lr_p=0.5, lr_w=0.5, gamma=0.1,
+                              eta=0.2), name="polb")
+
+
+def _loss_fn(params, batch, rng):
+    # decomposes per leaf: each tile's gradient is independent of which
+    # other tiles co-train (the bit-identity tests rely on this)
+    return sum(jnp.sum(v ** 2) for _, v in sorted(params.items())), {}
+
+
+def _trainer(plan: AnalogPlan, **kw) -> AnalogTrainer:
+    cfg = TrainerConfig(
+        digital=DigitalOptConfig(kind="sgd"),
+        schedule=ScheduleConfig(kind="constant", base_lr=0.1),
+        **kw,
+    )
+    return AnalogTrainer(_loss_fn, cfg, plan=plan)
+
+
+def _mixed_params():
+    params = {}
+    for i in range(2):
+        params[f"a/l{i}/attn/wq"] = 0.1 * jnp.ones((8, 8))
+        params[f"b/l{i}/attn/wq"] = 0.1 * jnp.ones((8, 8))
+    return params
+
+
+MIXED = AnalogPlan.of(("a/**", POL_A), ("b/**", POL_B))
+
+
+# ---------------------------------------------------------------------------
+# rule matching
+# ---------------------------------------------------------------------------
+
+
+def test_plan_first_match_wins_and_pattern_forms():
+    plan = AnalogPlan.of(
+        ("**/wq", POL_A),                       # glob: ** crosses /
+        ("re:attn/(wk|wv)$", POL_B),            # regex (search semantics)
+        (lambda p, l: p.endswith("wo"), POL_B),  # predicate
+        ("**/wq", POL_B),                       # shadowed: first match wins
+        default=DIGITAL,
+    )
+    leaf = jnp.ones((4, 4))
+    assert plan.policy_for("l0/attn/wq", leaf) is POL_A
+    assert plan.policy_for("l3/attn/wk", leaf) is POL_B
+    assert plan.policy_for("l3/attn/wo", leaf) is POL_B
+    assert plan.policy_for("l0/mlp/wi", leaf) is DIGITAL   # default
+    # * stays within one path segment
+    plan2 = AnalogPlan.of(("*/wq", POL_A))
+    assert plan2.policy_for("attn/wq", leaf) is POL_A
+    assert plan2.policy_for("l0/attn/wq", leaf) is DIGITAL
+
+
+def test_plan_min_ndim_keeps_vectors_digital():
+    plan = AnalogPlan.of(("**", POL_A))
+    assert plan.policy_for("w", jnp.ones((4, 4))) is POL_A
+    assert plan.policy_for("bias", jnp.ones((4,))) is DIGITAL
+    # analog_min_ndim=0 disables the guard (legacy-shim behavior)
+    plan0 = AnalogPlan.of(("**", POL_A), analog_min_ndim=0)
+    assert plan0.policy_for("bias", jnp.ones((4,))) is POL_A
+
+
+def test_lm_plan_keeps_embeddings_digital():
+    plan = lm_plan(("**", POL_A))
+    leaf = jnp.ones((8, 8))
+    assert plan.policy_for("embed/table", leaf) is DIGITAL
+    assert plan.policy_for("lm_head/w", leaf) is DIGITAL
+    assert plan.policy_for("l0/attn/wq", leaf) is POL_A
+
+
+# ---------------------------------------------------------------------------
+# mixed-policy grouped engine
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_policies_split_groups_and_tag_names():
+    params = _mixed_params()
+    policies = {p: (POL_A if p.startswith("a/") else POL_B) for p in params}
+    index = dict(group_tiles({p: v.shape for p, v in params.items()},
+                             TileConfig(), policies))
+    assert set(index) == {"g8x8_float32_nM_ppola", "g8x8_float32_nM_ppolb"}
+    assert index["g8x8_float32_nM_ppola"] == tuple(
+        sorted(p for p in params if p.startswith("a/")))
+    # single-policy plans keep the pre-AnalogPlan (untagged) keys
+    single = dict(group_tiles({p: v.shape for p, v in params.items()},
+                              TileConfig(), {p: POL_A for p in params}))
+    assert set(single) == {"g8x8_float32_nM"}
+
+
+def test_mixed_plan_bit_identical_to_side_by_side_single_policy():
+    """Acceptance criterion: a mixed-plan trainer's tiles evolve bit-for-bit
+    like the same tiles trained in separate single-policy trainers (per-path
+    CRC-keyed RNG, per-leaf-decomposable loss)."""
+    params = _mixed_params()
+
+    def run(plan, params, steps=4):
+        tr = _trainer(plan)
+        state = tr.init(jax.random.PRNGKey(7), params)
+        step = tr.jit_step(donate=False)
+        for _ in range(steps):
+            state, m = step(state, jnp.zeros(()))
+        return state
+
+    mixed = run(MIXED, params)
+    only_a = run(AnalogPlan.of(("**", POL_A)),
+                 {p: v for p, v in params.items() if p.startswith("a/")})
+    only_b = run(AnalogPlan.of(("**", POL_B)),
+                 {p: v for p, v in params.items() if p.startswith("b/")})
+
+    bank = mixed["tiles"]
+    assert isinstance(bank, TileBank)
+    assert len(bank.groups) == 2
+    for p in params:
+        ref = (only_a if p.startswith("a/") else only_b)["tiles"][p]
+        assert jax.tree_util.tree_structure(bank[p]) \
+            == jax.tree_util.tree_structure(ref), p
+        jax.tree.map(
+            lambda x, y: np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y), err_msg=p), bank[p], ref)
+
+
+def test_mixed_plan_scan_matches_unroll_and_aggregates_metrics():
+    """Scanned vs unrolled parity holds under a mixed plan too, and metrics
+    aggregate the union of the two algorithms' key sets."""
+    params = _mixed_params()
+
+    def run(scan):
+        tr = _trainer(MIXED, scan_groups=scan)
+        state = tr.init(jax.random.PRNGKey(3), params)
+        step = tr.jit_step(donate=False)
+        for _ in range(3):
+            state, m = step(state, jnp.zeros(()))
+        return state, m
+
+    s_scan, m_scan = run(True)
+    s_unroll, m_unroll = run(False)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        s_scan["tiles"], s_unroll["tiles"])
+    assert set(m_scan) == set(m_unroll)
+    for k in ("tile/pulses", "tile/sp_err"):
+        assert np.isfinite(float(m_scan[k])), k
+
+
+def test_looped_engine_honors_predicate_rule_policies():
+    """The looped engine must use the policy resolved at init (with real
+    leaves) — a leaf-dependent predicate rule must neither crash the
+    leafless train_step re-resolution nor silently fall back to the
+    trainer-default TileConfig."""
+    plan = AnalogPlan.of((lambda p, l: l.ndim >= 2, POL_B),
+                         analog_min_ndim=0)
+    tr = _trainer(plan, engine="looped")
+    state = tr.init(jax.random.PRNGKey(2), {"w": 0.1 * jnp.ones((8, 8))})
+    # rider tiles have no Qt slot (erider-only) — proves POL_B was used
+    assert state["tiles"]["w"].get("Qt") is None
+    state, m = tr.jit_step(donate=False)(state, jnp.zeros(()))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_describe_plan_one_liner():
+    tr = _trainer(MIXED)
+    line = tr.describe_plan(_mixed_params())
+    assert "4 analog paths -> 2 groups" in line
+    assert "erider: 2" in line and "rider: 2" in line
+
+
+# ---------------------------------------------------------------------------
+# legacy shim
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_constructor_shim_warns_exactly_once():
+    _reset_legacy_warning()
+    cfg = TrainerConfig(tile=POL_A.tile,
+                        digital=DigitalOptConfig(kind="sgd"),
+                        schedule=ScheduleConfig(kind="constant", base_lr=0.1))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        tr = AnalogTrainer(_loss_fn, cfg, analog_filter=lambda p, l: True)
+        AnalogTrainer(_loss_fn, cfg, analog_filter=lambda p, l: True)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "AnalogPlan" in str(w.message)]
+    assert len(dep) == 1
+    # ... and the shimmed trainer still trains (one-rule plan, min_ndim 0)
+    state = tr.init(jax.random.PRNGKey(0), {"w": 0.1 * jnp.ones((8, 8))})
+    _, m = tr.jit_step(donate=False)(state, jnp.zeros(()))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_plan_and_filter_are_mutually_exclusive():
+    cfg = TrainerConfig(digital=DigitalOptConfig(kind="sgd"),
+                        schedule=ScheduleConfig(kind="constant", base_lr=0.1))
+    with pytest.raises(ValueError, match="not both"):
+        AnalogTrainer(_loss_fn, cfg, analog_filter=lambda p, l: True,
+                      plan=MIXED)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint layout v3
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_records_members_and_policies(tmp_path):
+    tr = _trainer(MIXED)
+    state = tr.init(jax.random.PRNGKey(0), _mixed_params())
+    ckpt.save(state, str(tmp_path), step=1)
+    with open(os.path.join(str(tmp_path), "step_000000001",
+                           "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["layout"] == 3
+    groups = manifest["tile_groups"]
+    bank = state["tiles"]
+    assert set(groups) == {g for g, _ in bank.index}
+    for g, paths in bank.index:
+        assert groups[g]["members"] == list(paths)
+        pol = bank.policy(g)
+        assert groups[g]["policy"]["tile"]["algorithm"] == pol.tile.algorithm
+        assert policy_from_json(groups[g]["policy"]) == pol
+
+
+def test_policy_json_roundtrip():
+    for pol in (POL_A, POL_B, DIGITAL):
+        assert policy_from_json(policy_to_json(pol)) == pol
+
+
+def test_legacy_single_policy_checkpoint_rekeys_into_mixed_plan(tmp_path):
+    """Acceptance criterion: a checkpoint written under one global policy
+    (untagged group keys, one stack holding all same-shape tiles) restores
+    into a mixed-plan template — each policy-tagged group gathers its member
+    rows out of the old combined stack."""
+    params = _mixed_params()
+    single = _trainer(AnalogPlan.of(("**", POL_A)))
+    state = single.init(jax.random.PRNGKey(1), params)
+    state, _ = single.jit_step(donate=False)(state, jnp.zeros(()))
+    assert {g for g, _ in state["tiles"].index} == {"g8x8_float32_nM"}
+    ckpt.save(state, str(tmp_path), step=1)
+
+    # POL_A-everywhere checkpoint into a POL_A/POL_B template: the b-group's
+    # stored policy differs -> restore warns but re-keys (rider's slot set
+    # is a subset of erider's)
+    mixed = _trainer(MIXED)
+    template = mixed.init(jax.random.PRNGKey(1), params)
+    with pytest.warns(UserWarning, match="polb"):
+        restored = ckpt.restore(template, str(tmp_path))
+    assert {g for g, _ in restored["tiles"].index} \
+        == {"g8x8_float32_nM_ppola", "g8x8_float32_nM_ppolb"}
+    for p in params:
+        np.testing.assert_array_equal(
+            np.asarray(restored["tiles"][p]["W"]),
+            np.asarray(state["tiles"][p]["W"]), err_msg=p)
+        np.testing.assert_array_equal(
+            np.asarray(restored["tiles"][p]["Qd"]),
+            np.asarray(state["tiles"][p]["Qd"]), err_msg=p)
+    # the re-keyed mixed state steps
+    restored2, m = mixed.jit_step(donate=False)(restored, jnp.zeros(()))
+    assert np.isfinite(float(m["loss"]))
+    assert int(restored2["step"]) == 2
+
+
+def test_mixed_plan_checkpoint_restores_into_single_policy_template(tmp_path):
+    """The reverse re-key: a mixed-plan checkpoint (policy-split stacks)
+    restores into a coarser single-policy template by merging the split
+    stacks via the v3 member map (with a policy-mismatch warning for the
+    tiles that changed policy). The single policy is POL_B (rider), whose
+    slot set is a subset of both stored algorithms' — a template needing
+    slots an old policy never materialized (e.g. erider's Qt from rider
+    tiles) still fails, correctly."""
+    params = _mixed_params()
+    mixed = _trainer(MIXED)
+    state = mixed.init(jax.random.PRNGKey(4), params)
+    state, _ = mixed.jit_step(donate=False)(state, jnp.zeros(()))
+    ckpt.save(state, str(tmp_path), step=1)
+
+    single = _trainer(AnalogPlan.of(("**", POL_B)))
+    template = single.init(jax.random.PRNGKey(4), params)
+    assert {g for g, _ in template["tiles"].index} == {"g8x8_float32_nM"}
+    with pytest.warns(UserWarning, match="pola"):
+        restored = ckpt.restore(template, str(tmp_path))
+    for p in params:
+        np.testing.assert_array_equal(
+            np.asarray(restored["tiles"][p]["W"]),
+            np.asarray(state["tiles"][p]["W"]), err_msg=p)
+    restored2, m = single.jit_step(donate=False)(restored, jnp.zeros(()))
+    assert np.isfinite(float(m["loss"]))
+    assert int(restored2["step"]) == 2
+
+
+def test_mixed_plan_checkpoint_roundtrip(tmp_path):
+    tr = _trainer(MIXED)
+    state = tr.init(jax.random.PRNGKey(0), _mixed_params())
+    step = tr.jit_step(donate=False)
+    state, _ = step(state, jnp.zeros(()))
+    ckpt.save(state, str(tmp_path), step=1)
+    restored = ckpt.restore(state, str(tmp_path), verify=True)
+    s2a, _ = step(state, jnp.zeros(()))
+    s2b, _ = step(restored, jnp.zeros(()))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        s2a["tiles"], s2b["tiles"])
