@@ -1,17 +1,30 @@
 """Sharded checkpointing with async save, integrity manifest and elastic
 restore (resharding to a different mesh on load).
 
-Format (layout v3): one directory per step:
+Format (layout v4): one directory per step:
   step_000123/
     manifest.json   — {path: {shape, dtype, file, crc32}}, step, timestamp;
                       "tile_groups" records, for every TileBank stack, its
                       member weight-paths in stacking order and the resolved
                       TilePolicy (devices + algorithm + hyper-parameters)
-                      that trained it — so restore re-keys stacks from the
-                      checkpoint's own layout instead of reconstructing the
-                      order from the restore template, and a checkpoint is
-                      self-describing about the plan that produced it.
+                      that trained it; "tile_classes" records each scan
+                      class's member groups in class-stack order (with
+                      their per-slot member paths) — so restore re-keys
+                      stacks from the checkpoint's own layout instead of
+                      reconstructing the order from the restore template,
+                      and a checkpoint is self-describing about the plan
+                      that produced it.
     arrays_000.npz  — leaf arrays keyed by their tree path (chunked ~512MB)
+
+Layout v4 (class-keyed TileBank storage) writes tile leaves as
+``tiles/<class>/<slot>`` with a (C, n, *member) shape — one array per scan
+class, exactly the zero-copy form the grouped engine trains on. Restore
+upgrades any older layout on the fly (see the re-key matrix in
+docs/architecture.md): v3 per-group stacks, v2 coarser-keyed stacks and v1
+per-tile checkpoints all assemble into v4 class stacks bit-identically, and
+a v4 checkpoint restores into any differently-partitioned template
+(replanned policies, v3-era per-group consumers) by slicing the class
+stacks back apart.
 
 Restore takes a *template* pytree (abstract or concrete) and returns arrays
 device_put with the caller's shardings — so a checkpoint written on one mesh
@@ -46,7 +59,7 @@ def _flatten(tree) -> Dict[str, Any]:
 
 def _tile_group_manifest(tree) -> Dict[str, Any]:
     """Per-group member paths + resolved policy of every TileBank in
-    ``tree`` (manifest layout v3). Member order IS the stacking order."""
+    ``tree`` (manifest layout v3+). Member order IS the stacking order."""
     from repro.core.plan import policy_to_json
     from repro.core.tile import TileBank
 
@@ -66,12 +79,35 @@ def _tile_group_manifest(tree) -> Dict[str, Any]:
     return out
 
 
+def _tile_class_manifest(tree) -> Dict[str, Any]:
+    """Per-class member groups (in class-stack order) and their member
+    weight-paths for every TileBank in ``tree`` (manifest layout v4). Row
+    ``ci`` of a class array is the stack of ``members[ci]``."""
+    from repro.core.tile import TileBank
+
+    out: Dict[str, Any] = {}
+
+    def visit(x):
+        if isinstance(x, TileBank):
+            pidx = dict(x.index)
+            for cname, gnames in x.class_index:
+                out[cname] = {
+                    "groups": list(gnames),
+                    "members": [list(pidx[g]) for g in gnames],
+                }
+        return None
+
+    jax.tree.map(visit, tree, is_leaf=lambda x: isinstance(x, TileBank))
+    return out
+
+
 def save(tree, directory: str, step: int, *, asynchronous: bool = False) -> Optional[threading.Thread]:
     """Write a checkpoint. With asynchronous=True the device->host copy
     happens immediately but file IO runs on a daemon thread."""
     flat = _flatten(tree)
     host = {k: np.asarray(v) for k, v in flat.items() if v is not None}
     tile_groups = _tile_group_manifest(tree)
+    tile_classes = _tile_class_manifest(tree)
 
     def _write():
         # unique tmp dir: an async save and a final sync save of the same
@@ -81,9 +117,11 @@ def save(tree, directory: str, step: int, *, asynchronous: bool = False) -> Opti
         final = os.path.join(directory, f"step_{step:09d}")
         os.makedirs(tmp, exist_ok=True)
         manifest: Dict[str, Any] = {"step": step, "time": time.time(),
-                                    "layout": 3, "arrays": {}}
+                                    "layout": 4, "arrays": {}}
         if tile_groups:
             manifest["tile_groups"] = tile_groups
+        if tile_classes:
+            manifest["tile_classes"] = tile_classes
         chunk_idx, chunk, chunk_bytes = 0, {}, 0
 
         def flush():
@@ -282,13 +320,95 @@ def _legacy_grouped_arr(key, manifest, load_arr, bank_members):
     return np.stack(rows)
 
 
+def _group_view(manifest, load_arr):
+    """Per-group view of a v4 class-keyed checkpoint: returns a
+    ``(manifest', load_arr')`` pair in which every ``tiles/<group>/<slot>``
+    of every class member exists as a virtual array (a static ``[ci]``
+    slice of its class stack). All pre-v4 re-key strategies
+    (``_legacy_grouped_arr``) then work against a v4 source unchanged —
+    this is the v4 -> v3-partition fallback direction of the re-key
+    matrix. Checkpoints without ``tile_classes`` pass through untouched."""
+    import re
+
+    classes = manifest.get("tile_classes")
+    if not classes:
+        return manifest, load_arr
+    arrays = dict(manifest["arrays"])
+    virtual: Dict[str, tuple] = {}
+    for key, meta in manifest["arrays"].items():
+        m = re.match(r"^tiles/([^/]+)/(.+)$", key)
+        if not m or m.group(1) not in classes:
+            continue
+        cname, slot = m.group(1), m.group(2)
+        for ci, g in enumerate(classes[cname]["groups"]):
+            gkey = f"tiles/{g}/{slot}"
+            # single-group classes (cname == g) are overridden too: the
+            # group view always has the (n, *member) member shape
+            virtual[gkey] = (key, ci)
+            arrays[gkey] = {**meta, "shape": list(meta["shape"][1:])}
+    man2 = dict(manifest)
+    man2["arrays"] = arrays
+
+    def load2(key):
+        v = virtual.get(key)
+        if v is None:
+            return load_arr(key)
+        return load_arr(v[0])[v[1]]
+
+    return man2, load2
+
+
+def _class_arr(key, manifest, load_arr, bank_members):
+    """Assemble a v4 class-keyed leaf ``tiles/<class>/<slot>`` that is not
+    stored under its own key, by stacking its member groups — each group
+    coming from a same-name v3 stack, a re-keyed older layout
+    (``_legacy_grouped_arr``), or a slice of a differently-partitioned v4
+    class (``_group_view``). Returns None when ``key`` is not a class
+    leaf or a member group cannot be assembled."""
+    import re
+
+    from repro.core.tile import parse_class_name, parse_group_name
+
+    m = re.match(r"^tiles/([^/]+)/(.+)$", key)
+    if not m:
+        return None
+    cname, slot = m.group(1), m.group(2)
+    groups = parse_class_name(cname)
+    if any(parse_group_name(g) is None for g in groups):
+        return None
+    gman, gload = _group_view(manifest, load_arr)
+    parts = []
+    for g in groups:
+        gkey = f"tiles/{g}/{slot}"
+        if gkey in gman["arrays"]:
+            arr = gload(gkey)
+        else:
+            arr = _legacy_grouped_arr(gkey, gman, gload, bank_members)
+        if arr is None:
+            return None
+        parts.append(arr)
+    return np.stack(parts)
+
+
+def _policy_json_matches(new, stored) -> bool:
+    """Tolerant policy comparison: only keys the checkpoint actually
+    recorded constrain the match, so TileConfig fields added after the
+    checkpoint was written (e.g. ``update_backend``) compare as their
+    defaults instead of flagging every old checkpoint as mismatched."""
+    if isinstance(new, dict) and isinstance(stored, dict):
+        return all(_policy_json_matches(new.get(k), v)
+                   for k, v in stored.items())
+    return new == stored
+
+
 def _warn_policy_mismatch(template, manifest) -> None:
-    """Warn when a template group's TilePolicy differs from the policy the
-    checkpoint records for it (layout v3 manifests only). Groups absent
-    from the manifest under their own name compare against the coarser
-    legacy key they would re-key from (``_legacy_grouped_arr``'s candidate
-    order), so retraining a single-policy checkpoint under a different
-    mixed plan warns too."""
+    """Emit ONE consolidated warning listing every template stack whose
+    TilePolicy differs from the policy the checkpoint records for it
+    (layout v3+ manifests only) — large mixed plans would otherwise spam
+    one warning per stack. Groups absent from the manifest under their own
+    name compare against the coarser legacy key they would re-key from
+    (``_legacy_grouped_arr``'s candidate order), so retraining a
+    single-policy checkpoint under a different mixed plan warns too."""
     from repro.core.plan import policy_to_json
     from repro.core.tile import TileBank, group_name, parse_group_name
 
@@ -313,6 +433,8 @@ def _warn_policy_mismatch(template, manifest) -> None:
                 if (parse_group_name(g2) or (None,) * 3)[:3]
                 == (shape, dtype_name, tag)]
 
+    mismatched = []
+
     def visit(x):
         if isinstance(x, TileBank):
             for g, _ in x.index:
@@ -320,16 +442,21 @@ def _warn_policy_mismatch(template, manifest) -> None:
                 if pol is None:
                     continue
                 for rec in stored_policies(g):
-                    if rec is not None and policy_to_json(pol) != rec:
-                        warnings.warn(
-                            f"tile group {g} was trained under policy "
-                            f"{rec.get('name') or rec.get('tag')}; the "
-                            f"restore template resolves it to "
-                            f"{pol.name or pol.tag}",
-                            stacklevel=3)
+                    if rec is not None and not _policy_json_matches(
+                            policy_to_json(pol), rec):
+                        mismatched.append(
+                            f"{g} ({rec.get('name') or rec.get('tag')}"
+                            f" -> {pol.name or pol.tag})")
+                        break
         return None
 
     jax.tree.map(visit, template, is_leaf=lambda x: isinstance(x, TileBank))
+    if mismatched:
+        warnings.warn(
+            f"{len(mismatched)} tile stack(s) restore under a different "
+            f"policy than the one they were trained with: "
+            f"{'; '.join(mismatched)}",
+            stacklevel=3)
 
 
 def restore(template, directory: str, step: Optional[int] = None, *,
@@ -339,16 +466,20 @@ def restore(template, directory: str, step: Optional[int] = None, *,
     shardings: optional matching pytree of NamedShardings (elastic restore —
     the stored full arrays are device_put with the *new* mesh's shardings).
 
-    Grouped tile state (``tiles/<group>/...`` with a leading stack axis)
-    restores from any layout: same-layout checkpoints load directly; legacy
-    per-tile checkpoints are upgraded on the fly by stacking their member
-    tiles in group order; coarser-keyed stacks — (shape, dtype)-only
-    (pre-spec-aware keys) or untagged single-policy stacks (pre-AnalogPlan)
-    — are re-keyed by gathering each new group's member rows out of the old
-    combined stack, using the checkpoint's own ``tile_groups`` member
-    manifest when present. A stored per-group policy that differs from the
-    restore template's policy warns (restoring a checkpoint into a
-    different plan is legal but usually a mistake).
+    Class-keyed tile state (``tiles/<class>/...`` with (C, n, *member)
+    leaves, layout v4) restores from any layout: same-layout checkpoints
+    load directly; v3 per-group stacks assemble into class stacks group by
+    group; legacy per-tile checkpoints are upgraded by stacking their
+    member tiles in group order; coarser-keyed stacks — (shape,
+    dtype)-only (pre-spec-aware keys) or untagged single-policy stacks
+    (pre-AnalogPlan) — are re-keyed by gathering each group's member rows
+    out of the old combined stack, using the checkpoint's own
+    ``tile_groups`` member manifest when present; and a v4 checkpoint
+    restores into a differently-partitioned template by slicing its class
+    stacks back into per-group arrays (``_group_view``). Stored per-group
+    policies that differ from the restore template's are reported in one
+    consolidated warning (restoring a checkpoint into a different plan is
+    legal but usually a mistake).
     """
     if step is None:
         step = latest_step(directory)
@@ -383,12 +514,18 @@ def restore(template, directory: str, step: Optional[int] = None, *,
         if leaf is None:
             out.append(None)
             continue
-        if key in manifest["arrays"]:
+        expect = tuple(leaf.shape)
+        if key in manifest["arrays"] and \
+                tuple(manifest["arrays"][key]["shape"]) == expect:
             arr = load_arr(key)
         else:
-            arr = _legacy_grouped_arr(key, manifest, load_arr, bank_members)
+            arr = _class_arr(key, manifest, load_arr, bank_members)
+            if arr is None:
+                arr = _legacy_grouped_arr(key, manifest, load_arr,
+                                          bank_members)
+            if arr is None and key in manifest["arrays"]:
+                arr = load_arr(key)  # let the shape assert report it
             assert arr is not None, f"checkpoint missing leaf {key}"
-        expect = tuple(leaf.shape)
         assert tuple(arr.shape) == expect, (key, arr.shape, expect)
         if shard_flat is not None and shard_flat[i] is not None:
             out.append(jax.device_put(arr, shard_flat[i]))

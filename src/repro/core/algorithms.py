@@ -63,6 +63,10 @@ def _dev(st: TileState, which: str, cfg: TileConfig, shape):
 
 
 def _base_metrics(cfg: TileConfig, st: TileState, dw_p=None, dw_w=None) -> Metrics:
+    # each diagnostic below is an extra full pass + reduction over the tile;
+    # cfg.metrics trades them away at LM scale ('pulses' / 'none')
+    if cfg.metrics == "none":
+        return {}
     m: Metrics = {}
     pulses = jnp.zeros((), jnp.float32)
     if dw_p is not None:
@@ -71,6 +75,8 @@ def _base_metrics(cfg: TileConfig, st: TileState, dw_p=None, dw_w=None) -> Metri
         pulses = pulses + expected_pulses(dw_w, cfg.device_w.dw_min, cfg.bl)
     m["pulses"] = pulses
     has_dev_p = st.get("dev_p") is not None or st.get("seed_p") is not None
+    if cfg.metrics == "pulses":
+        return m
     if st.get("P") is not None and has_dev_p:
         dev_p = _dev(st, "p", cfg, st["P"].shape)
         _, g = fg(st["P"].astype(jnp.float32), dev_p, cfg.device_p)
@@ -219,7 +225,162 @@ def update(
             st["Qd"] = ((1.0 - cfg.eta) * st["Qd"].astype(jnp.float32)
                         + cfg.eta * p_new).astype(st["Qd"].dtype)
         metrics = _base_metrics(cfg, st, dw_p=dp, dw_w=dw)
-        if a == "erider":
+        if a == "erider" and cfg.metrics != "none":
+            metrics["prog_events"] = st["prog"].astype(jnp.float32)
+
+    else:
+        raise ValueError(a)
+
+    st["t"] = st["t"] + 1
+    return st, metrics
+
+
+# ---------------------------------------------------------------------------
+# batched update (the grouped engine's 'fused' backend)
+# ---------------------------------------------------------------------------
+
+
+def _hash_noise_batched(seeds, shape):
+    """Per-tile fastrng streams for a (n, *shape) stack: row i consumes
+    exactly the bits ``kops.analog_update(rng='hash')`` would draw for tile
+    i alone (seed = raw key data, salts 1/2), so the batched update stays
+    bit-identical to the vmapped per-tile one."""
+    from repro.kernels import fastrng
+
+    ub = jax.vmap(lambda s: fastrng.hash_bits(s, shape, 1))(seeds)
+    zt = jax.vmap(lambda s: fastrng.hash_normal(s, shape, 2))(seeds)
+    return ub, zt
+
+
+def update_batched(
+    st: TileState, grad, keys_raw, cfg: TileConfig, lr
+) -> Tuple[TileState, Metrics]:
+    """``update`` over a whole (n, *member) group stack in one program.
+
+    ``st`` is a TileBank group stack (array leaves (n, *member), per-tile
+    scalars (n,), seeds (n, 2)); ``keys_raw`` is the (n, 2) raw key data the
+    vmap backend would hand each tile. Noise comes from per-tile fastrng
+    hash streams (no threefry while-loops over weight-sized arrays) and the
+    pulse update runs on the full stack — on TPU that is one 3-D batched
+    Pallas kernel launch per array. Bit-identical to
+    ``jax.vmap(update)(..., rng='hash')`` (tested): same per-tile key
+    derivation, same hash bits, same elementwise math — only the program
+    shape differs. Per-tile reductions (absmean grad norm, metrics) reduce
+    over member axes only, so tiles never couple.
+    """
+    from .device import sample_device
+
+    a = cfg.algorithm
+    st = TileState(st)
+    nd = st["W"].ndim
+    axes = tuple(range(1, nd))
+    member = st["W"].shape[1:]
+
+    def bc(x):  # per-tile scalar (n,) -> broadcast shape (n, 1, ..., 1)
+        return x.reshape(x.shape + (1,) * (nd - x.ndim))
+
+    def dev_of(which):
+        dev = st.get(f"dev_{which}")
+        if dev is not None:
+            return dev
+        dcfg = cfg.device_p if which == "p" else cfg.device_w
+        return jax.vmap(lambda sd: sample_device(
+            jax.random.wrap_key_data(sd), member, dcfg, method="hash")
+        )(st[f"seed_{which}"])
+
+    def au(x, dx, dev, dcfg, kraw):
+        noise = _hash_noise_batched(kraw, member)
+        return analog_update(x, dx, dev, dcfg, None, bl=cfg.bl,
+                             mode=cfg.pulse_mode, noise=noise)
+
+    def pulses_of(dw, dw_min):
+        n = jnp.abs(dw.astype(jnp.float32)) / dw_min
+        if cfg.bl:
+            n = jnp.minimum(n, float(cfg.bl))
+        return jnp.sum(n, axis=axes)
+
+    def base_metrics(dw_p=None, dw_w=None) -> Metrics:
+        if cfg.metrics == "none":
+            return {}
+        m: Metrics = {}
+        pulses = jnp.zeros(st["scale"].shape, jnp.float32)
+        if dw_p is not None:
+            pulses = pulses + pulses_of(dw_p, cfg.device_p.dw_min)
+        if dw_w is not None:
+            pulses = pulses + pulses_of(dw_w, cfg.device_w.dw_min)
+        m["pulses"] = pulses
+        has_dev_p = st.get("dev_p") is not None or st.get("seed_p") is not None
+        if cfg.metrics == "pulses":
+            return m
+        if st.get("P") is not None and has_dev_p:
+            dev_p = dev_of("p")
+            _, gg = fg(st["P"].astype(jnp.float32), dev_p, cfg.device_p)
+            m["gp_sq"] = jnp.mean(gg * gg, axis=axes)
+            if st.get("Qd") is not None:
+                sp = symmetric_point(dev_p, cfg.device_p)
+                m["sp_err"] = jnp.mean(
+                    (st["Qd"].astype(jnp.float32) - sp) ** 2, axis=axes)
+        return m
+
+    g = grad.astype(jnp.float32) * bc(st["scale"])
+    if cfg.grad_norm == "absmean":
+        g = (g / (jnp.mean(jnp.abs(g), axis=axes, keepdims=True) + 1e-12)
+             * cfg.device_p.dw_min)
+    # per-tile kp/kw key chain, identical to update()'s split(key, 3)
+    ks = jax.vmap(lambda kr: jax.random.key_data(
+        jax.random.split(jax.random.wrap_key_data(kr), 3)))(keys_raw)
+    kp, kw = ks[:, 0], ks[:, 1]
+    alpha = lr * cfg.lr_p
+    beta = lr * cfg.lr_w
+    dev_w = dev_of("w")
+    dev_p = dev_of("p") if (st.get("dev_p") is not None
+                            or st.get("seed_p") is not None) else None
+
+    if a == "sgd":
+        dw = -beta * g
+        st["W"] = au(st["W"], dw, dev_w, cfg.device_w, kw)
+        metrics = base_metrics(dw_w=dw)
+
+    elif a in ("ttv1", "ttv2", "agad"):
+        c = bc(st["c"]) if a == "agad" else jnp.ones((), jnp.float32)
+        dp = -alpha * c * g
+        st["P"] = au(st["P"], dp, dev_p, cfg.device_p, kp)
+        do_transfer = bc((st["t"] % cfg.transfer_every) == 0)
+        read = st["P"].astype(jnp.float32)
+        if a == "ttv1":
+            dw = jnp.where(do_transfer, beta * read, 0.0)
+            st["W"] = au(st["W"], dw, dev_w, cfg.device_w, kw)
+        else:
+            if a == "agad":
+                st["Qd"] = ((1.0 - cfg.eta) * st["Qd"].astype(jnp.float32)
+                            + cfg.eta * read).astype(st["Qd"].dtype)
+                read = read - st["Qd"].astype(jnp.float32)
+            thr = cfg.threshold * cfg.device_w.dw_min
+            h = st["H"] + jnp.where(do_transfer, beta * c * read, 0.0)
+            n = jnp.trunc(h / thr)
+            dw = n * thr
+            st["H"] = h - dw
+            st["W"] = au(st["W"], dw, dev_w, cfg.device_w, kw)
+        metrics = base_metrics(dw_p=dp, dw_w=dw)
+
+    elif a in ("residual", "rider", "erider"):
+        c = bc(st["c"]) if a == "erider" else jnp.ones((), jnp.float32)
+        dp = -alpha * c * g
+        st["P"] = au(st["P"], dp, dev_p, cfg.device_p, kp)
+        p_new = st["P"].astype(jnp.float32)
+        q_ref = st["Qt"] if a == "erider" else st["Qd"]
+        dw = beta * c * (p_new - q_ref.astype(jnp.float32))
+        if cfg.buffered_transfer:
+            thr = cfg.threshold * cfg.device_w.dw_min
+            h = st["H"] + dw
+            dw = jnp.trunc(h / thr) * thr
+            st["H"] = h - dw
+        st["W"] = au(st["W"], dw, dev_w, cfg.device_w, kw)
+        if a in ("rider", "erider"):
+            st["Qd"] = ((1.0 - cfg.eta) * st["Qd"].astype(jnp.float32)
+                        + cfg.eta * p_new).astype(st["Qd"].dtype)
+        metrics = base_metrics(dw_p=dp, dw_w=dw)
+        if a == "erider" and cfg.metrics != "none":
             metrics["prog_events"] = st["prog"].astype(jnp.float32)
 
     else:

@@ -31,16 +31,22 @@ def analog_update(
     bl: int = 0,
     mode: str = "fused",
     rng: str = "threefry",
+    noise=None,
 ):
-    """Apply desired increment ``dw`` to analog array ``w`` via pulses."""
+    """Apply desired increment ``dw`` to analog array ``w`` via pulses.
+
+    ``noise`` optionally carries pre-drawn ``(ubits, zeta)`` (uint32 bits
+    for the stochastic rounding + standard normal for c2c); the grouped
+    engine's fused backend passes one batched stream for a whole stack.
+    """
     if cfg.kind in ("softbounds", "linear") and mode == "fused":
         return kops.analog_update(
             w, dw, dp["gamma"], dp["rho"], key,
             dw_min=cfg.dw_min, tau_min=cfg.tau_min, tau_max=cfg.tau_max,
-            sigma_c2c=cfg.sigma_c2c, bl=bl, rng=rng,
+            sigma_c2c=cfg.sigma_c2c, bl=bl, rng=rng, noise=noise,
         )
     if mode == "fused":
-        return _fused_generic(w, dw, dp, cfg, key, bl=bl)
+        return _fused_generic(w, dw, dp, cfg, key, bl=bl, noise=noise)
     if mode == "train":
         return _pulse_train(w, dw, dp, cfg, key, bl=max(bl, 1))
     raise ValueError(f"unknown pulse mode {mode}")
@@ -53,19 +59,32 @@ def _stochastic_round(x, key):
     return fl + (u < frac).astype(jnp.float32)
 
 
-def _fused_generic(w, dw, dp, cfg, key, *, bl):
-    """Fused update for non-softbounds families (jnp path only)."""
-    ku, kz = jax.random.split(key)
+def _fused_generic(w, dw, dp, cfg, key, *, bl, noise=None):
+    """Fused update for any response family (jnp path; the kernels' oracle).
+
+    With pre-drawn ``noise=(ubits, zeta)`` the rounding uniform is
+    ``ubits * 2**-32`` — the exact expression the Pallas kernel and the
+    jnp ref use — so this path is bit-comparable against them.
+    """
     wf = w.astype(jnp.float32)
-    n_q = _stochastic_round(dw.astype(jnp.float32) / cfg.dw_min, ku)
+    if noise is None:
+        ku, kz = jax.random.split(key)
+        n_q = _stochastic_round(dw.astype(jnp.float32) / cfg.dw_min, ku)
+        zeta = jax.random.normal(kz, w.shape)
+    else:
+        ubits, zeta = noise
+        x = dw.astype(jnp.float32) / cfg.dw_min
+        fl = jnp.floor(x)
+        u = ubits.astype(jnp.float32) * (1.0 / 4294967296.0)
+        n_q = fl + (u < x - fl).astype(jnp.float32)
     if bl:
         n_q = jnp.clip(n_q, -float(bl), float(bl))
     delta = n_q * cfg.dw_min
     f, g = fg(wf, dp, cfg)
     qp, qm = responses(wf, dp, cfg)
     q_dir = jnp.where(delta >= 0, qp, qm)
-    noise = cfg.dw_min * cfg.sigma_c2c * jnp.sqrt(jnp.abs(n_q)) * q_dir
-    out = wf + delta * f - jnp.abs(delta) * g + noise * jax.random.normal(kz, w.shape)
+    amp = cfg.dw_min * cfg.sigma_c2c * jnp.sqrt(jnp.abs(n_q)) * q_dir
+    out = wf + delta * f - jnp.abs(delta) * g + amp * zeta
     return jnp.clip(out, -cfg.tau_min, cfg.tau_max).astype(w.dtype)
 
 

@@ -61,15 +61,36 @@ class TileConfig:
     # learning rate counts *pulses per element per step* — device-
     # granularity-invariant. 'none' uses raw model gradients.
     grad_norm: str = "none"
+    # Pulse-update execution backend for the grouped engine:
+    # 'vmap' (reference) runs the per-tile update under jax.vmap with
+    # per-tile threefry/hash keys; 'fused' runs one batched update over the
+    # whole (n, *member) stack with noise drawn as per-tile fastrng hash
+    # streams — the form that feeds the batched Pallas kernel on TPU and
+    # skips threefry's while-loops on CPU. 'fused' is bit-identical to
+    # 'vmap' with rng='hash' (tested); it ignores ``rng``.
+    update_backend: str = "vmap"
     # Buffered (thresholded) W-transfer for residual/rider/erider: the
     # (18b) increment accumulates in a digital buffer and is emitted as
     # whole pulses (AIHWKit forget-buffer semantics — what the paper's
     # experiments run). Essential on low-state devices where a continuous
     # sub-pulse transfer stochastically fires huge dw_min pulses.
     buffered_transfer: bool = False
+    # Per-step diagnostic tile metrics. 'full' (default) reports pulse
+    # counts plus the SP-tracking diagnostics (gp_sq, sp_err) — each is an
+    # extra full pass + reduction over every tile, ~a third of a grouped
+    # erider step on CPU. 'pulses' keeps only pulse counts; 'none' skips
+    # all per-tile metrics (LM-scale / benchmark configs).
+    metrics: str = "full"
 
     def __post_init__(self):
         assert self.algorithm in ALGORITHMS, self.algorithm
+        assert self.metrics in ("full", "pulses", "none"), self.metrics
+        assert self.update_backend in ("vmap", "fused"), self.update_backend
+        if self.update_backend == "fused":
+            # the batched backend pre-draws (ubits, zeta) once per stack;
+            # the sequential pulse train draws per pulse and can't consume it
+            assert self.pulse_mode == "fused", \
+                "update_backend='fused' requires pulse_mode='fused'"
 
 
 def _needs(algorithm: str, buffered: bool = False) -> Dict[str, bool]:
@@ -229,46 +250,150 @@ def parse_group_name(name: str) -> Optional[tuple]:
     return shape, m.group(2), m.group(3) or "", m.group(4) or ""
 
 
+def class_name(group_names) -> str:
+    """Scan-class key: '+'-joined member group names (member order). A
+    single-group class is keyed by the group name itself; '+' is not in the
+    ``group_name`` charset, so the two namespaces cannot collide."""
+    return "+".join(group_names)
+
+
+def parse_class_name(name: str) -> tuple:
+    """Inverse of ``class_name``: member group names, in stack order."""
+    return tuple(name.split("+"))
+
+
+def class_partition(groups: Dict[str, "TileState"], index, policies=None):
+    """Partition grouped tile states into *scan classes*: groups with
+    identical tree structure, leaf shapes/dtypes AND TilePolicy, which can
+    therefore share one scanned/vmapped update graph and one storage stack.
+
+    The sharding-rule template tag is deliberately NOT part of the
+    signature — an "nM" and an "Mn" group of the same shape run the same
+    program and live in the same class; only their sharding specs differ
+    (``distributed.sharding`` re-derives those per member group).
+
+    Returns the class index: ((class_name, (group, ...)), ...), classes
+    sorted by name, members in ``index`` order.
+    """
+    policies = policies or {}
+    by_sig: Dict[Any, list] = {}
+    for g, _ in index:
+        leaves, treedef = jax.tree_util.tree_flatten(groups[g])
+        sig = (str(treedef),
+               tuple((tuple(l.shape), jnp.dtype(l.dtype).name) for l in leaves),
+               policies.get(g))
+        by_sig.setdefault(sig, []).append(g)
+    return tuple(sorted(
+        (class_name(gs), tuple(gs)) for gs in by_sig.values()))
+
+
+def _stack_states(states):
+    """Stack same-structure TileStates along a new leading axis. Handles
+    ShapeDtypeStruct leaves (abstract banks) and uses a free expand_dims
+    for singleton classes instead of a copying stack."""
+    def stk(*ls):
+        if isinstance(ls[0], jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct((len(ls),) + tuple(ls[0].shape),
+                                        ls[0].dtype)
+        if len(ls) == 1:
+            return jnp.expand_dims(ls[0], 0)
+        return jnp.stack(ls)
+    return jax.tree.map(stk, *states)
+
+
+def _class_member(state, ci: int):
+    """Slice member group ``ci`` out of a class stack (static index)."""
+    def sl(leaf):
+        if isinstance(leaf, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(tuple(leaf.shape)[1:], leaf.dtype)
+        return leaf[ci]
+    return jax.tree.map(sl, state)
+
+
 class TileBank:
-    """All analog tiles of a trainer, stacked by (shape, dtype) group.
+    """All analog tiles of a trainer, stored as class-keyed stacks.
 
-    ``groups`` maps group key -> TileState whose every array leaf carries a
-    new leading *stack* axis of length = number of member tiles; per-tile
-    scalars (t, c, scale, prog) become (n,) vectors and per-tile seeds (2,)
-    become (n, 2). ``index`` is the static path layout: a tuple of
-    (group_key, (member-path, ...)) pairs, members sorted, groups sorted by
-    key — it lives in the pytree *treedef* (aux data), so it is a hashable
-    jit-static constant and the jitted train_step can drive one vmapped
-    update per group instead of one update per tile.
+    Canonical storage (checkpoint layout v4) is ``classes``: scan-class key
+    -> TileState whose every array leaf carries TWO leading axes,
+    ``(C, n, *member)`` — C member groups of n tiles each. Per-tile scalars
+    (t, c, scale, prog) are (C, n) and per-tile seeds (C, n, 2). Storing the
+    pre-stacked class directly is what lets the grouped engine's
+    ``lax.scan`` consume state in place: zero ``jnp.stack`` on entry, zero
+    ``leaf[ci]`` gather on exit, and the buffers donate straight through
+    the step.
 
-    The stack axis is element-local like everything else in a tile, which is
-    what makes it the natural ZeRO/scan sharding axis (DESIGN.md §3).
+    ``index`` is the static path layout ((group, (member-path, ...)), ...)
+    and ``class_index`` the static class layout ((class, (group, ...)), ...);
+    both live in the pytree treedef (aux data) so they are hashable
+    jit-static constants. ``groups`` remains available as a computed view
+    (``leaf[ci]`` slices) for per-group consumers; the stack axes are
+    element-local like everything else in a tile, which is what makes axis 1
+    the natural ZeRO/scan sharding axis (DESIGN.md §3).
 
     ``policies`` optionally maps group key -> the TilePolicy every member of
-    that stack resolved to under the trainer's AnalogPlan. It rides in the
-    treedef aux data next to ``index`` (TilePolicy is hashable), so the
-    jitted train_step can build each group's update graph with its own
-    static TileConfig. Banks built without policies (legacy layouts,
-    hand-assembled stacks) fall back to the trainer's default TileConfig.
+    that stack resolved to under the trainer's AnalogPlan (policy is part of
+    the class signature, so all groups of a class share one). Banks built
+    without policies fall back to the trainer's default TileConfig.
+
+    ``TileBank(groups, index, policies)`` — the per-group constructor —
+    remains supported (legacy checkpoints, hand-assembled stacks, abstract
+    skeletons) and eagerly re-keys into class storage;
+    ``TileBank.from_classes`` is the zero-copy constructor the pytree
+    unflattener and the trainer use.
     """
 
     def __init__(self, groups: Dict[str, "TileState"], index, policies=None):
-        self.groups = dict(groups)
+        index = tuple((g, tuple(paths)) for g, paths in index)
+        policies = dict(policies or {})
+        class_index = class_partition(groups, index, policies)
+        classes = {
+            cname: _stack_states([groups[g] for g in gnames])
+            for cname, gnames in class_index
+        }
+        self._init(classes, index, class_index, policies)
+
+    @classmethod
+    def from_classes(cls, classes: Dict[str, "TileState"], index,
+                     class_index, policies=None) -> "TileBank":
+        """Wrap existing class-keyed stacks without touching the leaves."""
+        bank = cls.__new__(cls)
+        bank._init(dict(classes), index, class_index, policies)
+        return bank
+
+    def _init(self, classes, index, class_index, policies):
+        self.classes = dict(classes)
         self.index = tuple((g, tuple(paths)) for g, paths in index)
+        self.class_index = tuple((c, tuple(gs)) for c, gs in class_index)
         self.policies = dict(policies or {})
         self._where = {p: (g, i) for g, paths in self.index
                        for i, p in enumerate(paths)}
+        self._class_of = {g: (cname, ci)
+                          for cname, gnames in self.class_index
+                          for ci, g in enumerate(gnames)}
+        self._groups_view = None
 
     def policy(self, group: str):
         """TilePolicy of one stack (None for policy-less legacy banks)."""
         return self.policies.get(group)
+
+    @property
+    def groups(self) -> Dict[str, "TileState"]:
+        """Per-group view: {group: TileState with (n, *member) leaves},
+        sliced out of the class stacks by static index (compat surface for
+        per-group consumers; the engine itself reads ``classes``)."""
+        if self._groups_view is None:
+            self._groups_view = {
+                g: _class_member(self.classes[cname], ci)
+                for g, (cname, ci) in self._class_of.items()}
+        return self._groups_view
 
     # -- mapping interface over member tiles --------------------------------
     def __len__(self) -> int:
         return len(self._where)
 
     def __contains__(self, path) -> bool:
-        return path in self._where or path in self.groups
+        return (path in self._where or path in self._class_of
+                or path in self.classes)
 
     def __iter__(self):
         return iter(self._where)
@@ -277,28 +402,34 @@ class TileBank:
         return tuple(self._where)
 
     def __getitem__(self, path) -> "TileState":
-        """Per-tile view (sliced out of its stack) or a whole stacked group."""
-        if path in self.groups:
+        """Per-tile view, a per-group view, or a whole class stack."""
+        if path in self.classes and path not in self._class_of:
+            return self.classes[path]
+        if path in self._class_of:
             return self.groups[path]
         g, i = self._where[path]
-        return jax.tree.map(lambda leaf: leaf[i], self.groups[g])
+        cname, ci = self._class_of[g]
+        return jax.tree.map(lambda leaf: leaf[ci, i], self.classes[cname])
 
     def __repr__(self):
-        return (f"TileBank({len(self._where)} tiles in {len(self.groups)} "
-                f"groups: {[g for g, _ in self.index]})")
+        return (f"TileBank({len(self._where)} tiles in "
+                f"{len(self._class_of)} groups / {len(self.classes)} "
+                f"classes: {[c for c, _ in self.class_index]})")
 
 
 def _tilebank_flatten(bank: TileBank):
-    names = tuple(g for g, _ in bank.index)
-    return (tuple((jax.tree_util.DictKey(g), bank.groups[g]) for g in names),
-            (bank.index, tuple(sorted(bank.policies.items()))))
+    names = tuple(c for c, _ in bank.class_index)
+    return (tuple((jax.tree_util.DictKey(c), bank.classes[c]) for c in names),
+            (bank.index, bank.class_index,
+             tuple(sorted(bank.policies.items()))))
 
 
 jax.tree_util.register_pytree_with_keys(
     TileBank,
     _tilebank_flatten,
-    lambda aux, groups: TileBank(
-        dict(zip((g for g, _ in aux[0]), groups)), aux[0], dict(aux[1])),
+    lambda aux, classes: TileBank.from_classes(
+        dict(zip((c for c, _ in aux[1]), classes)), aux[0], aux[1],
+        dict(aux[2])),
 )
 
 

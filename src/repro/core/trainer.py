@@ -51,8 +51,9 @@ from . import algorithms as alg
 from .digital_opt import DigitalOptConfig, ScheduleConfig, apply_opt, init_opt, lr_at
 from .paths import path_str
 from .plan import AnalogPlan, TilePolicy, legacy_plan, plan_partition
-from .tile import (TileBank, TileConfig, abstract_tile, abstract_tile_group,
-                   group_policies, group_tiles, init_tile, stack_tiles)
+from .tile import (TileBank, TileConfig, _class_member, abstract_tile,
+                   abstract_tile_group, group_policies, group_tiles,
+                   init_tile, stack_tiles)
 
 logger = logging.getLogger("repro.plan")
 
@@ -125,17 +126,21 @@ def _group_tile_cfg(bank: TileBank, group: str, default: TileConfig) -> TileConf
 
 
 def effective_weights(tiles, tcfg: TileConfig, policies=None) -> Dict[str, jax.Array]:
-    """{path: model-space effective weight} for a TileBank (one vmapped
-    effective_weight per group, under that group's policy TileConfig) or a
-    legacy per-tile dict (``policies``: optional {path: TileConfig})."""
+    """{path: model-space effective weight} for a TileBank (one doubly-
+    vmapped effective_weight per class stack, read in place, then static
+    ``eff[ci, i]`` slices per member path) or a legacy per-tile dict
+    (``policies``: optional {path: TileConfig})."""
     if isinstance(tiles, TileBank):
         out = {}
-        for g, paths in tiles.index:
-            gcfg = _group_tile_cfg(tiles, g, tcfg)
-            eff = jax.vmap(lambda ts: alg.effective_weight(ts, gcfg))(
-                tiles.groups[g])
-            for i, p in enumerate(paths):
-                out[p] = eff[i]
+        pidx = dict(tiles.index)
+        for cname, gnames in tiles.class_index:
+            gcfg = _group_tile_cfg(tiles, gnames[0], tcfg)
+            eff = jax.vmap(jax.vmap(
+                lambda ts: alg.effective_weight(ts, gcfg)))(
+                    tiles.classes[cname])
+            for ci, g in enumerate(gnames):
+                for i, p in enumerate(pidx[g]):
+                    out[p] = eff[ci, i]
         return out
     policies = policies or {}
     return {p: alg.effective_weight(ts, policies.get(p, tcfg))
@@ -191,25 +196,19 @@ jax.tree_util.register_pytree_with_keys(
 )
 
 
-def _scan_classes(bank: TileBank):
-    """Same-structure classes of tile groups.
+def _vmap_tile(fn):
+    """Lift a per-tile ``fn(tile_state, key, *extras)`` to one group stack:
+    vmap over the member axis, wrapping each tile's raw (2,) key data."""
+    return jax.vmap(
+        lambda ts, kr, *ex: fn(ts, jax.random.wrap_key_data(kr), *ex))
 
-    Groups whose stacked states have identical treedef, leaf shapes/dtypes
-    AND TilePolicy — e.g. the wq-family and wo-family stacks of a uniform
-    transformer, distinct groups only by sharding-rule tag — can share one
-    lax.scan'ed copy of the tile graph instead of one unrolled vmap each.
-    The policy is part of the signature because each scanned class runs
-    under ONE static TileConfig — groups with different policies must keep
-    their own graphs. Returns a list of tuples of group indices into
-    ``bank.index``.
-    """
-    classes: Dict[Any, list] = {}
-    for gi, (g, _) in enumerate(bank.index):
-        leaves, treedef = jax.tree_util.tree_flatten(bank.groups[g])
-        sig = (treedef, tuple((tuple(l.shape), str(l.dtype)) for l in leaves),
-               bank.policy(g))
-        classes.setdefault(sig, []).append(gi)
-    return [tuple(v) for v in classes.values()]
+
+def _stack_rows(results):
+    """Restack per-group results into a class-shaped (C, ...) tree (the
+    unrolled reference path; singletons use a free expand_dims)."""
+    if len(results) == 1:
+        return jax.tree.map(lambda l: jnp.expand_dims(l, 0), results[0])
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *results)
 
 
 class AnalogTrainer:
@@ -295,76 +294,111 @@ class AnalogTrainer:
         return shd.constrain_stacked(tree, member_paths, self.mesh,
                                      prefix=prefix)
 
-    def _grouped_apply(self, bank: TileBank, make_fn, key, extras=()):
-        """One vmapped instance per tile group, scanned per class.
+    def _grouped_apply(self, bank: TileBank, make_vfn, key, extras=()):
+        """Apply one stack-level function per scan class, in place.
 
-        ``make_fn(tcfg)`` returns the per-tile function
-        ``fn(tile_state, key, *extra)`` specialized to one group's static
-        TileConfig (the group's TilePolicy under a mixed plan, the trainer
-        default otherwise); it is vmapped over each group's stack, and
-        same-structure same-policy classes of groups (``_scan_classes``)
-        additionally run under one jax.lax.scan, so the jitted program
-        holds one copy of the tile graph per (class, policy) instead of
-        per group. Per-group keys fold a CRC of the group's member-path
-        tuple — identical between the scanned and unrolled engines (bit-
-        identical results) and independent of which other groups co-train
-        (mixed-plan runs match side-by-side single-policy runs bit for
-        bit). With a mesh, stacks are pinned to explicit specs: shard_map
-        over the stack axis where available (jax >= 0.6, element-local
-        fn), with_sharding_constraint + GSPMD otherwise (jax 0.4.x).
+        ``make_vfn(tcfg)`` returns a *stack-level* function
+        ``vfn(group_state, keys_raw, *extra)`` over one (n, *member) group
+        stack, specialized to the class's static TileConfig (its TilePolicy
+        under a mixed plan, the trainer default otherwise) — usually
+        ``_vmap_tile`` of a per-tile function, or ``alg.update_batched``
+        for the fused backend. The bank's class storage already carries the
+        (C, n, *member) layout ``lax.scan`` wants, so the scanned path
+        consumes ``bank.classes`` directly: zero ``jnp.stack`` on entry,
+        zero ``leaf[ci]`` gather on exit (the acceptance HLO check counts
+        restack concatenates). Per-group keys fold a CRC of the group's
+        member-path tuple — identical between the scanned and unrolled
+        engines (bit-identical results) and independent of which other
+        groups co-train. With a mesh, stacks are pinned to explicit specs:
+        shard_map over the stack axis where available (jax >= 0.6),
+        with_sharding_constraint + GSPMD otherwise (jax 0.4.x).
 
-        extras: {group-name: stacked array} pytrees of per-group inputs
-        (analog gradients). Returns {group-name: vmapped fn output}.
+        extras: {class-name: (C, n, ...) stacked array} pytrees of
+        per-class inputs (analog gradients). Returns {class-name: vfn
+        output with a leading class axis} — singleton classes get a free
+        ``expand_dims``; ``scan_groups=False`` unrolls per group and
+        restacks (the PR-5-equivalent data-movement reference path).
+
+        Classes under a ``update_backend='fused'`` policy skip the scan
+        entirely: the class stack IS the batch of a hand-batched update, so
+        the (C, n) axes flatten to one (C*n, *member) stack — a free
+        reshape on class-keyed storage — and every phase runs as a single
+        fused program with no per-iteration slice/scatter. Per-tile key
+        streams are position-independent, so this is bit-identical to the
+        scanned and unrolled paths.
         """
-        index = bank.index
-
-        def vfn_for(g):
-            fn = make_fn(_group_tile_cfg(bank, g, self.cfg.tile))
-            return jax.vmap(
-                lambda ts, kr, *ex: fn(ts, jax.random.wrap_key_data(kr), *ex))
+        index = dict(bank.index)
 
         def keys_raw(paths):
             kg = _crc_fold(key, "|".join(paths))
             return jax.random.key_data(jax.random.split(kg, len(paths)))
 
-        classes = (_scan_classes(bank) if self.cfg.scan_groups
-                   else [(gi,) for gi in range(len(index))])
         out = {}
-        for cls in classes:
-            vfn = vfn_for(index[cls[0]][0])
-            if len(cls) == 1:
-                g, paths = index[cls[0]]
-                args = (self._constrain(bank.groups[g], paths),
-                        keys_raw(paths)) + tuple(
-                            self._constrain(e[g], paths) for e in extras)
+        for cname, gnames in bank.class_index:
+            tcfg = _group_tile_cfg(bank, gnames[0], self.cfg.tile)
+            vfn = make_vfn(tcfg)
+            cstate = bank.classes[cname]
+            if tcfg.update_backend == "fused":
+                n_c = len(gnames)
+                paths_list = tuple(index[g] for g in gnames)
+                flat_n = sum(len(ps) for ps in paths_list)
+                kr = (jnp.concatenate([keys_raw(ps) for ps in paths_list])
+                      if n_c > 1 else keys_raw(paths_list[0]))
+
+                def flat(t):
+                    return jax.tree.map(
+                        lambda l: l.reshape((-1,) + l.shape[2:]), t)
+
+                args = (self._constrain(flat(cstate), paths_list),
+                        kr) + tuple(
+                            self._constrain(flat(e[cname]), paths_list)
+                            for e in extras)
                 res = None
                 if self.mesh is not None:
                     from repro.distributed import sharding as shd
 
                     res = shd.shard_stacked_call(
-                        vfn, self.mesh, len(paths), *args)
+                        vfn, self.mesh, flat_n, *args)
                 if res is None:
                     res = vfn(*args)
-                out[g] = self._constrain(res, paths)
-            else:
-                names = [index[gi][0] for gi in cls]
-                paths_list = tuple(index[gi][1] for gi in cls)
-                stacked = jax.tree.map(
-                    lambda *ls: jnp.stack(ls),
-                    *(bank.groups[g] for g in names))
-                kr = jnp.stack([keys_raw(index[gi][1]) for gi in cls])
-                ex = [jnp.stack([e[g] for g in names]) for e in extras]
-                stacked = self._constrain(stacked, paths_list, prefix=1)
-                ex = [self._constrain(x, paths_list, prefix=1) for x in ex]
+                out[cname] = self._constrain(
+                    jax.tree.map(
+                        lambda l: l.reshape((n_c, flat_n // n_c)
+                                            + l.shape[1:]), res),
+                    paths_list, prefix=1)
+            elif len(gnames) > 1 and self.cfg.scan_groups:
+                paths_list = tuple(index[g] for g in gnames)
+                kr = jnp.stack([keys_raw(index[g]) for g in gnames])
+                cstate = self._constrain(cstate, paths_list, prefix=1)
+                ex = tuple(self._constrain(e[cname], paths_list, prefix=1)
+                           for e in extras)
 
                 def body(carry, xs):
                     return carry, vfn(*xs)
 
-                _, res = jax.lax.scan(body, (), (stacked, kr, *ex))
-                for ci, gi in enumerate(cls):
-                    g, paths = index[gi]
-                    out[g] = self._constrain(
-                        jax.tree.map(lambda leaf: leaf[ci], res), paths)
+                _, res = jax.lax.scan(body, (), (cstate, kr, *ex))
+                out[cname] = self._constrain(res, paths_list, prefix=1)
+            else:
+                results = []
+                for ci, g in enumerate(gnames):
+                    paths = index[g]
+                    args = (self._constrain(_class_member(cstate, ci),
+                                            paths),
+                            keys_raw(paths)) + tuple(
+                                self._constrain(
+                                    _class_member(e[cname], ci),
+                                    paths)
+                                for e in extras)
+                    res = None
+                    if self.mesh is not None:
+                        from repro.distributed import sharding as shd
+
+                        res = shd.shard_stacked_call(
+                            vfn, self.mesh, len(paths), *args)
+                    if res is None:
+                        res = vfn(*args)
+                    results.append(self._constrain(res, paths))
+                out[cname] = _stack_rows(results)
         return out
 
     # -- state ------------------------------------------------------------
@@ -439,9 +473,11 @@ class AnalogTrainer:
             bank: TileBank = state["tiles"]
             begun = self._grouped_apply(
                 bank,
-                lambda gcfg: (lambda ts, k: alg.begin_step(ts, k, gcfg)),
+                lambda gcfg: _vmap_tile(
+                    lambda ts, k: alg.begin_step(ts, k, gcfg)),
                 k_begin)
-            tiles = TileBank(begun, bank.index, bank.policies)
+            tiles = TileBank.from_classes(begun, bank.index, bank.class_index,
+                                          bank.policies)
             path_cfgs = None
         else:
             path_cfgs = {p: self._tile_cfg_of(p) for p in state["tiles"]}
@@ -502,18 +538,36 @@ class AnalogTrainer:
         # same-structure class), with a single split-once-per-group key;
         # looped engine is the legacy O(tiles) unrolled reference.
         agrads = extract_analog_grads(grads, tiles)
-        tile_metrics = []  # per-group (n,)-vector metrics / per-tile scalars
+        tile_metrics = []  # per-class (C*n,) metric vectors / per-tile scalars
         if grouped:
-            stacked_grads = {g: jnp.stack([agrads[p] for p in paths])
-                             for g, paths in tiles.index}
+            # One flat stack + free reshape per class, laid out by the
+            # static class index — grads enter the scan in storage order
+            # with a single rank-(member+1) concatenate (no per-group
+            # restack, no per-step dict re-walk).
+            pidx = dict(tiles.index)
+            stacked_grads = {}
+            for cname, gnames in tiles.class_index:
+                flat = [agrads[p] for g in gnames for p in pidx[g]]
+                cdims = tiles.classes[cname]["W"].shape[:2]
+                arr = (jnp.stack(flat) if len(flat) > 1
+                       else jnp.expand_dims(flat[0], 0))
+                stacked_grads[cname] = arr.reshape(cdims + flat[0].shape)
+
+            def make_update_vfn(gcfg):
+                if gcfg.update_backend == "fused":
+                    return lambda ts, kr, grd: alg.update_batched(
+                        ts, grd, kr, gcfg, lr)
+                return _vmap_tile(
+                    lambda ts, k, grd: alg.update(ts, grd, k, gcfg, lr))
+
             res = self._grouped_apply(
-                tiles,
-                lambda gcfg: (
-                    lambda ts, k, grd: alg.update(ts, grd, k, gcfg, lr)),
-                k_upd, extras=(stacked_grads,))
-            new_tiles = TileBank({g: res[g][0] for g, _ in tiles.index},
-                                 tiles.index, tiles.policies)
-            tile_metrics = [res[g][1] for g, _ in tiles.index]
+                tiles, make_update_vfn, k_upd, extras=(stacked_grads,))
+            new_tiles = TileBank.from_classes(
+                {c: res[c][0] for c, _ in tiles.class_index},
+                tiles.index, tiles.class_index, tiles.policies)
+            tile_metrics = [
+                jax.tree.map(lambda v: v.reshape(-1), res[c][1])
+                for c, _ in tiles.class_index]
         else:
             new_tiles = {}
             for p, ts in sorted(tiles.items()):

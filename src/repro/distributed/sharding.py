@@ -254,28 +254,40 @@ def state_shardings(state_tree, mesh: Mesh, zero_states: bool = True):
     """NamedShardings for an AnalogTrainer TrainState (abstract or concrete).
 
     Tile/optimizer arrays inherit the owning weight's spec plus ZeRO over the
-    data axes; scalars replicate. Grouped (TileBank) states put the ZeRO axis
-    on the leading stack dim (see grouped_tile_spec); legacy per-tile states
-    keep the seed behaviour.
+    data axes; scalars replicate. Class-keyed (TileBank) states carry
+    (C, n, *member) leaves: the class axis replicates (it is the scan axis),
+    the stack axis takes the ZeRO/data axes and the member dims the
+    dim-wise agreement of the member groups' model-axis specs — exactly the
+    spec ``constrain_stacked(prefix=1)`` pins inside the step, so a donated
+    train_step round-trips without resharding. Legacy per-tile states keep
+    the old behaviour.
     """
     from repro.core.tile import TileBank
 
     bank = state_tree.get("tiles") if hasattr(state_tree, "get") else None
     members = dict(bank.index) if isinstance(bank, TileBank) else {}
+    class_groups = dict(bank.class_index) if isinstance(bank, TileBank) else {}
 
     def spec_of(kp, leaf):
         path = path_str(kp)
         shape = leaf.shape
         if len(shape) == 0:
             return P()
-        # grouped layout: tiles/<group>/<slot>, leading stack axis
+        # class-keyed layout: tiles/<class>/<slot>, (C, n, *member) leaves
         m = re.match(rf"tiles/([^/]+)/{_TILE_SLOTS}$", path)
+        if m and m.group(1) in class_groups:
+            inner = merge_specs([
+                grouped_tile_spec(members[g], shape[1:], mesh,
+                                  zero=zero_states)
+                for g in class_groups[m.group(1)]])
+            return P(None, *inner)
+        # per-group layout (hand-built (n, *member) stacks): stack axis leads
         if m and m.group(1) in members:
             return grouped_tile_spec(members[m.group(1)], shape, mesh,
                                      zero=zero_states)
-        # grouped per-tile scalars stacked to (n,) / seeds (n, 2): replicate
+        # stacked per-tile scalars (C, n) / seeds (C, n, 2): replicate
         m = re.match(r"tiles/([^/]+)/(t|c|scale|prog|seed_w|seed_p)$", path)
-        if m and m.group(1) in members:
+        if m and (m.group(1) in class_groups or m.group(1) in members):
             return P(*([None] * len(shape)))
         # legacy per-tile layout: tiles/<weight-path>/<slot>
         m = re.match(rf"tiles/(.*)/{_TILE_SLOTS}$", path)

@@ -85,14 +85,19 @@ def analog_update_pallas(
     block=DEFAULT_BLOCK,
     interpret: bool = True,
 ):
-    """2-D fused analog update. Inputs must be 2-D with identical shape
-    (``ops.analog_update`` handles reshaping/padding of arbitrary trees)."""
-    assert w.ndim == 2, "kernel operates on 2-D tiles; use ops.analog_update"
-    m, n = w.shape
+    """Fused analog update on 2-D tiles or 3-D tile stacks.
+
+    2-D ``(m, n)`` inputs tile over a ``(m//bm, n//bn)`` grid; 3-D
+    ``(k, m, n)`` inputs (a TileBank class stack, member axis leading) add
+    the stack axis as the outermost grid dimension so each member streams
+    through VMEM independently — no flatten/restack on the host side.
+    ``ops.analog_update`` handles reshaping/padding of arbitrary trees.
+    """
+    assert w.ndim in (2, 3), "kernel operates on 2-D tiles or 3-D stacks"
+    m, n = w.shape[-2:]
     bm = min(block[0], m)
     bn = min(block[1], n)
     assert m % bm == 0 and n % bn == 0, "ops.py pads to block multiples"
-    grid = (m // bm, n // bn)
 
     kern = functools.partial(
         _kernel,
@@ -102,10 +107,15 @@ def analog_update_pallas(
         sigma_c2c=float(sigma_c2c),
         bl=int(bl),
     )
-    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    if w.ndim == 2:
+        grid = (m // bm, n // bn)
+        spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    else:
+        grid = (w.shape[0], m // bm, n // bn)
+        spec = pl.BlockSpec((1, bm, bn), lambda k, i, j: (k, i, j))
     return pl.pallas_call(
         kern,
-        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
         grid=grid,
         in_specs=[spec] * 6,
         out_specs=spec,

@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-_TWO_PI = 6.283185307179586
+_SQRT2 = 1.4142135623730951
 
 
 def _finalize(x):
@@ -51,12 +51,64 @@ def hash_uniform(seed, shape, salt: int):
     return hash_bits(seed, shape, salt).astype(jnp.float32) * (1.0 / 4294967296.0)
 
 
+# f32 just below 1: clamping |2u - 1| here caps samples at ~5.4 sigma and,
+# critically, keeps erfinv off the exact +/-1 poles — without it, lattice
+# values within ~6e-8 of the ends round to +/-1.0f and the inverse CDF
+# returns +/-inf (once every ~1e7 draws: hours at toy scale, minutes at LM
+# scale, and a single inf poisons W with NaN through the pulse update).
+_ONE_MINUS_EPS = 0.99999994
+_LN2 = 0.6931471805599453
+
+# Giles (2012), "Approximating the erfinv function": single-precision
+# central (w < 5) and tail polynomials in w = -log(1 - x^2).
+_ERFINV_CENTRAL = (3.43273939e-07, -3.5233877e-06, -4.39150654e-06,
+                   0.00021858087, -0.00125372503, -0.00417768164,
+                   0.246640727, 1.50140941)
+_ERFINV_TAIL = (0.000100950558, 0.00134934322, -0.00367342844,
+                0.00573950773, -0.0076224613, 0.00943887047,
+                1.00167406, 2.83297682)
+
+
+def _fast_neg_log(y):
+    """-log(y) for f32 y in (0, 1] via exponent/mantissa bitcast split.
+
+    ``jax.lax.erf_inv``'s dominant cost is its internal log; this bitcast
+    log (Mineiro's fastlog2: linear exponent term + rational mantissa
+    correction, |err| < 3e-4) is ~5x cheaper and the erfinv polynomial
+    contracts the error further (~5e-5 in the returned sample — far inside
+    the f32 noise floor of the pulse math that consumes it).
+    """
+    bi = jax.lax.bitcast_convert_type(y, jnp.int32)
+    mant = jax.lax.bitcast_convert_type(
+        (bi & 0x007FFFFF) | 0x3F000000, jnp.float32)  # mantissa/2 in [.5, 1)
+    log2y = (bi.astype(jnp.float32) * 1.1920928955078125e-07
+             - 124.22551499 - 1.498030302 * mant
+             - 1.72587999 / (0.3520887068 + mant))
+    return -_LN2 * log2y
+
+
 def hash_normal(seed, shape, salt: int):
-    """Standard normal via Box-Muller over two hashed uniforms."""
-    u1 = hash_uniform(seed, shape, salt)
-    u2 = hash_uniform(seed, shape, salt + 0x5BD1)
-    r = jnp.sqrt(-2.0 * jnp.log(jnp.maximum(u1, 1e-12)))
-    return r * jnp.cos(_TWO_PI * u2)
+    """Standard normal via the inverse CDF over one hashed uniform.
+
+    One hash draw + a fused-friendly erfinv (fast bitcast log + Giles'
+    polynomials) is ~5x cheaper than Box-Muller's log/cos pair and stays
+    the exact inverse-CDF transform to ~5e-5 absolute, so distribution
+    tests that pass for threefry pass here too. The +0.5 centers the
+    uint32 lattice inside (0, 1).
+    """
+    u = (hash_bits(seed, shape, salt).astype(jnp.float32) + 0.5) * (
+        1.0 / 4294967296.0)
+    x = jnp.clip(2.0 * u - 1.0, -_ONE_MINUS_EPS, _ONE_MINUS_EPS)
+    w = _fast_neg_log(1.0 - x * x)
+    wc = w - 2.5
+    p1 = jnp.float32(2.81022636e-08)
+    for c in _ERFINV_CENTRAL:
+        p1 = p1 * wc + jnp.float32(c)
+    ws = jnp.sqrt(jnp.maximum(w, 5.0)) - 3.0
+    p2 = jnp.float32(-0.000200214257)
+    for c in _ERFINV_TAIL:
+        p2 = p2 * ws + jnp.float32(c)
+    return _SQRT2 * jnp.where(w < 5.0, p1, p2) * x
 
 
 def seed_from_key(key):

@@ -49,6 +49,15 @@ def _pad2d(x, bm, bn, fill=0.0):
     return x
 
 
+def _pad3d(x, bm, bn, fill=0.0):
+    _, m, n = x.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, 0), (0, pm), (0, pn)), constant_values=fill)
+    return x
+
+
 def _view2d(x):
     """View an arbitrary-rank array as 2-D (leading dims flattened)."""
     if x.ndim == 0:
@@ -79,18 +88,25 @@ def analog_update(
     bl: int = 0,
     interpret: bool = True,
     rng: str = "threefry",
+    noise=None,
 ):
     """Fused analog pulse update; see kernels/ref.analog_update_ref.
 
     rng='threefry' uses jax.random (paper-grade, bit-stable); rng='hash'
     uses the fused stateless hash (kernels/fastrng.py) — required at LM
     scale where threefry's while-loop blocks GSPMD sharding propagation.
+    ``noise`` optionally supplies pre-drawn ``(ubits, zeta)`` at ``w.shape``
+    (the grouped engine's fused backend draws one batched stream for a
+    whole tile stack); when given, ``key``/``rng`` are ignored and may be
+    None.
     """
     kwargs = dict(
         dw_min=dw_min, tau_min=tau_min, tau_max=tau_max, sigma_c2c=sigma_c2c, bl=bl
     )
 
     def make_noise(shape):
+        if noise is not None:
+            return noise
         if rng == "hash":
             from . import fastrng
 
@@ -109,6 +125,20 @@ def analog_update(
         return ref.analog_update_ref(w, dw, gamma, rho, ubits, zeta, **kwargs)
 
     shape = w.shape
+    ubits, zeta = make_noise(shape)
+    if w.ndim == 3:
+        # Tile-stack fast path: keep the member axis as the outermost kernel
+        # grid dimension instead of flattening members into one 2-D view.
+        m, n = shape[1:]
+        bm = min(UPD_BLOCK[0], m)
+        bn = min(UPD_BLOCK[1], n)
+        pad3 = lambda x, fill=0.0: _pad3d(x, bm, bn, fill=fill)
+        out = analog_update_pallas(
+            pad3(w), pad3(dw), pad3(gamma, fill=1.0), pad3(rho),
+            pad3(ubits, fill=jnp.uint32(1 << 31)), pad3(zeta),
+            interpret=interpret, **kwargs,
+        )
+        return out[:, :m, :n]
     w2 = _view2d(w)
     m, n = w2.shape
     bm = min(UPD_BLOCK[0], m)
@@ -120,7 +150,6 @@ def analog_update(
     # Draw noise at the ORIGINAL shape so ref and pallas consume identical
     # random bits for any (possibly non-block-multiple) tile, then pad into
     # the kernel grid: ubits=2^31 / zeta=0 keep the dw=0 padding inert.
-    ubits, zeta = make_noise(shape)
     u2 = _pad2d(_view2d(ubits), bm, bn, fill=jnp.uint32(1 << 31))
     z2 = _pad2d(_view2d(zeta), bm, bn)
     out = analog_update_pallas(

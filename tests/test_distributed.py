@@ -228,9 +228,13 @@ for i in range(2):
 state = trainer.init(jax.random.PRNGKey(0), params)
 names = set(g for g, _ in state["tiles"].index)
 assert names == {"g8x8_float32_nM", "g8x8_float32_Mn"}, names
+cname = "g8x8_float32_Mn+g8x8_float32_nM"
+assert [c for c, _ in state["tiles"].class_index] == [cname]
 sh = state_shardings(state, mesh)
-assert sh["tiles"].groups["g8x8_float32_nM"]["W"].spec == P("data", None, "model")
-assert sh["tiles"].groups["g8x8_float32_Mn"]["W"].spec == P("data", "model", None)
+# class axis replicates (scan axis); stack axis takes ZeRO/data; member dims
+# are the dim-wise agreement of nM and Mn rules (conflict -> replicate)
+assert sh["tiles"].classes[cname]["W"].spec == P(None, "data", None, None)
+assert sh["tiles"].classes[cname]["t"].spec == P(None, None)
 state = jax.device_put(state, sh)
 total = sum(l.nbytes for l in jax.tree.leaves(state["tiles"]))
 per_dev = sum(l.addressable_shards[0].data.nbytes
@@ -239,8 +243,9 @@ assert per_dev <= total / 2 + 1024, (per_dev, total)   # ~ZeRO/data factor
 step = jax.jit(trainer.train_step, in_shardings=(sh, None), donate_argnums=(0,))
 for _ in range(2):
     state, m = step(state, jnp.zeros(()))
-w = state["tiles"].groups["g8x8_float32_nM"]["W"]
-assert w.sharding.spec == P("data", None, "model"), w.sharding
+w = state["tiles"].classes[cname]["W"]
+wspec = tuple(w.sharding.spec) + (None,) * (w.ndim - len(w.sharding.spec))
+assert wspec == (None, "data", None, None), w.sharding
 assert np.isfinite(float(m["loss"]))
 print("SHARDED_BANK_OK", per_dev, total)
 """, devices=4)

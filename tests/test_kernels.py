@@ -121,6 +121,99 @@ def test_ops_mvm_backends_identical_on_ragged_shapes():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol)
 
 
+@pytest.mark.parametrize("preset", ["reram_hfo2", "reram_om",
+                                    "softbounds_2000", "ecram", "ideal"])
+def test_analog_update_pallas_matches_fused_generic(preset):
+    """The Pallas kernel's inline softbounds response must agree with the
+    generic jnp oracle (``pulse._fused_generic``) for every named device
+    preset — same injected (ubits, zeta) noise, so any drift is math, not
+    RNG. |w| stays inside 0.8x the device range to keep the oracle's
+    positive-definiteness clip (responses() eps floor) inactive; outside it
+    the kernel intentionally skips the clip (TPU fast path)."""
+    from repro.core import device, pulse
+
+    cfg = device.PRESETS[preset]
+    shape = (256, 512)
+    ks = jax.random.split(KEY, 5)
+    lim = 0.8 * min(cfg.tau_min, cfg.tau_max)
+    w = jax.random.uniform(ks[0], shape, jnp.float32, -lim, lim)
+    dw = 3.0 * cfg.dw_min * jax.random.normal(ks[1], shape)
+    dp = device.sample_device(ks[2], shape, cfg)
+    ubits = jax.random.bits(ks[3], shape, dtype=jnp.uint32)
+    zeta = jax.random.normal(ks[4], shape)
+    got = analog_update_pallas(
+        w, dw, dp["gamma"], dp["rho"], ubits, zeta,
+        dw_min=cfg.dw_min, tau_min=cfg.tau_min, tau_max=cfg.tau_max,
+        sigma_c2c=cfg.sigma_c2c, bl=10)
+    want = pulse._fused_generic(w, dw, dp, cfg, None, bl=10,
+                                noise=(ubits, zeta))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_analog_update_pallas_batched_stack_matches_per_tile():
+    """The 3-D (stack, m, n) kernel form — one grid axis per class member —
+    must be bitwise the per-member 2-D kernel: the grouped engine's fused
+    backend relies on this to process a whole TileBank class in one call."""
+    ks = jax.random.split(KEY, 6)
+    shape = (3, 64, 128)
+    w = jax.random.uniform(ks[0], shape, jnp.float32, -0.8, 0.8)
+    dw = 0.05 * jax.random.normal(ks[1], shape)
+    gamma = jnp.exp(0.1 * jax.random.normal(ks[2], shape))
+    rho = 0.3 * jax.random.normal(ks[3], shape)
+    ubits = jax.random.bits(ks[4], shape, dtype=jnp.uint32)
+    zeta = jax.random.normal(ks[5], shape)
+    kw = dict(dw_min=0.01, tau_min=1.0, tau_max=1.0, sigma_c2c=0.1, bl=10,
+              block=(64, 128))
+    got = analog_update_pallas(w, dw, gamma, rho, ubits, zeta, **kw)
+    for i in range(shape[0]):
+        want_i = analog_update_pallas(w[i], dw[i], gamma[i], rho[i],
+                                      ubits[i], zeta[i], **kw)
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want_i),
+                                      err_msg=f"member {i}")
+
+
+def test_hash_normal_finite_at_lattice_edges(monkeypatch):
+    """Regression: the inverse-CDF transform must stay finite at the ends of
+    the uint32 lattice. Without the clip in hash_normal, bits near 0 and
+    2^32-1 round |2u-1| to exactly 1.0f and erfinv returns +-inf — one such
+    draw (~1e-7 probability per element) NaN-poisons W through the pulse
+    update."""
+    from repro.kernels import fastrng
+
+    edge = jnp.array([0, 1, 2 ** 31 - 1, 2 ** 31, 2 ** 32 - 2, 2 ** 32 - 1],
+                     dtype=jnp.uint32)
+    monkeypatch.setattr(fastrng, "hash_bits", lambda seed, shape, salt: edge)
+    z = np.asarray(fastrng.hash_normal(jnp.zeros(2, jnp.uint32),
+                                       edge.shape, 0))
+    assert np.all(np.isfinite(z)), z
+    # the clip caps samples at ~5.4 sigma; the ends are symmetric
+    assert np.all(np.abs(z) < 6.0), z
+    np.testing.assert_allclose(z[0], -z[-1], rtol=1e-5)
+    assert z[0] < -3.0 and z[-1] > 3.0, z
+
+
+def test_hash_normal_matches_exact_inverse_cdf(monkeypatch):
+    """hash_normal's fast erfinv (bitcast log + Giles polynomials) tracks
+    the exact inverse CDF to well inside the f32 noise floor of the pulse
+    math that consumes it."""
+    from repro.kernels import fastrng
+
+    rng = np.random.default_rng(0)
+    bits = jnp.asarray(rng.integers(0, 2 ** 32, size=1 << 16,
+                                    dtype=np.uint32))
+    monkeypatch.setattr(fastrng, "hash_bits", lambda seed, shape, salt: bits)
+    got = np.asarray(fastrng.hash_normal(jnp.zeros(2, jnp.uint32),
+                                         bits.shape, 0))
+    u = (bits.astype(jnp.float32) + 0.5) * (1.0 / 4294967296.0)
+    x = jnp.clip(2.0 * u - 1.0, -fastrng._ONE_MINUS_EPS,
+                 fastrng._ONE_MINUS_EPS)
+    exact = np.asarray(fastrng._SQRT2 * jax.lax.erf_inv(x.astype(jnp.float64)),
+                       np.float64)
+    err = np.abs(got - exact)
+    assert err.mean() < 1e-4, err.mean()
+    assert err.max() < 0.02, err.max()  # worst case sits in the clamped tail
+
+
 def test_ops_wrappers_arbitrary_rank():
     """ops.* accept >2-D and 1-D inputs (reshape/pad handled)."""
     from repro.kernels import ops

@@ -249,7 +249,7 @@ def test_manifest_records_members_and_policies(tmp_path):
     with open(os.path.join(str(tmp_path), "step_000000001",
                            "manifest.json")) as f:
         manifest = json.load(f)
-    assert manifest["layout"] == 3
+    assert manifest["layout"] == 4
     groups = manifest["tile_groups"]
     bank = state["tiles"]
     assert set(groups) == {g for g, _ in bank.index}
@@ -258,6 +258,14 @@ def test_manifest_records_members_and_policies(tmp_path):
         pol = bank.policy(g)
         assert groups[g]["policy"]["tile"]["algorithm"] == pol.tile.algorithm
         assert policy_from_json(groups[g]["policy"]) == pol
+    # v4: the class manifest records each class's groups in stack order,
+    # with their member paths per slot
+    classes = manifest["tile_classes"]
+    pidx = dict(bank.index)
+    assert set(classes) == {c for c, _ in bank.class_index}
+    for c, gnames in bank.class_index:
+        assert classes[c]["groups"] == list(gnames)
+        assert classes[c]["members"] == [list(pidx[g]) for g in gnames]
 
 
 def test_policy_json_roundtrip():
@@ -340,3 +348,31 @@ def test_mixed_plan_checkpoint_roundtrip(tmp_path):
         lambda a, b: np.testing.assert_array_equal(np.asarray(a),
                                                    np.asarray(b)),
         s2a["tiles"], s2b["tiles"])
+
+
+def test_policy_mismatch_warning_is_consolidated(tmp_path):
+    """Restoring a checkpoint whose EVERY stack trained under a different
+    policy emits ONE warning naming all mismatched stacks — not one warning
+    per stack (large mixed plans would spam hundreds)."""
+    params = _mixed_params()
+    mixed = _trainer(MIXED)
+    state = mixed.init(jax.random.PRNGKey(6), params)
+    state, _ = mixed.jit_step(donate=False)(state, jnp.zeros(()))
+    ckpt.save(state, str(tmp_path), step=1)
+
+    # retune both policies (same algorithms/slots, new names): every stack
+    # in the template now restores under a different policy than it trained
+    # with
+    pol_a2 = TilePolicy(POL_A.tile, name="tuna")
+    pol_b2 = TilePolicy(POL_B.tile, name="tunb")
+    retuned = _trainer(AnalogPlan.of(("a/**", pol_a2), ("b/**", pol_b2)))
+    template = retuned.init(jax.random.PRNGKey(6), params)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ckpt.restore(template, str(tmp_path))
+    pol = [w for w in rec if "policy" in str(w.message)]
+    assert len(pol) == 1, [str(w.message) for w in rec]
+    msg = str(pol[0].message)
+    assert msg.startswith("2 tile stack(s)"), msg
+    assert "g8x8_float32_nM_ptuna" in msg, msg
+    assert "g8x8_float32_nM_ptunb" in msg, msg

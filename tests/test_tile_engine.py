@@ -118,6 +118,90 @@ def test_scan_groups_bit_identical_to_unroll():
                                    rtol=1e-6, err_msg=k)
 
 
+def test_class_name_roundtrip_and_partition():
+    """Scan classes: same-structure groups share one pre-stacked pytree.
+    The class key is the sorted '+'-join of its member group names, and the
+    partition signature is (treedef, leaf shapes/dtypes, policy) — so the
+    nM and Mn groups of one transformer block co-scan while a different
+    shape or policy splits off."""
+    from repro.core.tile import (TileBank, class_name, class_partition,
+                                 group_name, init_tile, parse_class_name)
+
+    assert class_name(("a", "b")) == "a+b"
+    assert parse_class_name("a+b") == ("a", "b")
+    assert parse_class_name("solo") == ("solo",)
+
+    cfg = TileConfig(algorithm="erider", device_p=DEV, device_w=DEV)
+    key = jax.random.PRNGKey(0)
+
+    def stack(n, shape):
+        per = [init_tile(jax.random.fold_in(key, i), 0.1 * jnp.ones(shape), cfg)
+               for i in range(n)]
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *per)
+
+    nm, mn = group_name((8, 8), jnp.float32, "nM"), \
+        group_name((8, 8), jnp.float32, "Mn")
+    odd = group_name((4, 24), jnp.float32, "nM")
+    groups = {nm: stack(3, (8, 8)), mn: stack(3, (8, 8)),
+              odd: stack(1, (4, 24))}
+    index = tuple((g, tuple(f"{g}/p{i}" for i in range(3 if g != odd else 1)))
+                  for g in (nm, mn, odd))
+    cidx = class_partition(groups, index)
+    assert dict(cidx) == {class_name((nm, mn)): (nm, mn), odd: (odd,)}
+
+    bank = TileBank(groups, index)
+    assert [c for c, _ in bank.class_index] == sorted(
+        [class_name((nm, mn)), odd])
+    # class leaves are (C, n, *member); the per-group view slices them back
+    assert bank.classes[class_name((nm, mn))]["W"].shape == (2, 3, 8, 8)
+    for g in (nm, mn, odd):
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), bank.groups[g], groups[g])
+
+
+def test_fused_backend_bit_identical_to_vmap_hash():
+    """Acceptance criterion: the fused batched pulse-update backend (one
+    flattened update over each class stack, fastrng noise) is bit-identical
+    to the vmap reference running rng='hash' — the per-tile hash streams
+    are position-independent, so flattening (C, n) -> (C*n) changes no
+    bits."""
+
+    def run(backend):
+        cfg = TrainerConfig(
+            tile=TileConfig(algorithm="erider", device_p=DEV, device_w=DEV,
+                            lr_p=0.5, lr_w=0.5, gamma=0.1, eta=0.1,
+                            chopper_p=0.1, rng="hash",
+                            update_backend=backend),
+            digital=DigitalOptConfig(kind="sgd"),
+            schedule=ScheduleConfig(kind="constant", base_lr=0.1),
+        )
+        tr = AnalogTrainer(_loss_fn, cfg, analog_filter=lambda p, l: True)
+        params = {}
+        for i in range(3):  # 2-group (nM + Mn) class plus an odd singleton
+            params[f"l{i}/attn/wq"] = 0.1 * jnp.ones((8, 8))
+            params[f"l{i}/attn/wo"] = 0.1 * jnp.ones((8, 8))
+        params["odd"] = 0.1 * jnp.ones((4, 24))
+        state = tr.init(jax.random.PRNGKey(7), params)
+        step = tr.jit_step(donate=False)
+        for _ in range(5):
+            state, m = step(state, jnp.zeros(()))
+        return state, m
+
+    s_f, m_f = run("fused")
+    s_v, m_v = run("vmap")
+    # the two banks' aux policies differ (update_backend), so compare the
+    # class-keyed storage leaves directly
+    assert set(s_f["tiles"].classes) == set(s_v["tiles"].classes)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+        dict(s_f["tiles"].classes), dict(s_v["tiles"].classes))
+    assert set(m_f) == set(m_v)
+    for k in m_f:
+        np.testing.assert_allclose(np.asarray(m_f[k]), np.asarray(m_v[k]),
+                                   rtol=1e-6, err_msg=k)
+
+
 def test_init_groups_by_shape_and_matches_looped_init():
     """Grouped init is a pure re-layout: every per-path view must be bitwise
     identical to the legacy looped init (same per-tile fold_in seeds)."""
@@ -285,6 +369,78 @@ def test_legacy_shape_dtype_checkpoint_rekeys_into_spec_groups(tmp_path):
     # the re-keyed state steps
     restored2, m = tr.jit_step(donate=False)(restored, jnp.zeros(()))
     assert np.isfinite(float(m["loss"]))
+
+
+def test_v3_pergroup_checkpoint_restores_into_v4_bit_identical(tmp_path):
+    """Acceptance criterion: a layout-v3 checkpoint (per-GROUP stacks, no
+    ``tile_classes`` manifest) restores into the class-keyed v4 storage
+    bit-identically, and the restored state trains bit-identically to the
+    state the checkpoint was taken from. The v3 fixture is built by
+    down-converting a v4 save: each (C, n, *member) class array is split
+    into its C per-group (n, *member) arrays, exactly what the v3 writer
+    produced."""
+    import json
+    import zlib
+
+    from repro.checkpoint import ckpt
+
+    tr = _trainer("grouped")
+    params = {}
+    for i in range(3):  # wq -> nM, wo -> Mn: one 2-group class, plus odd
+        params[f"l{i}/attn/wq"] = 0.1 * jnp.ones((8, 8))
+        params[f"l{i}/attn/wo"] = 0.1 * jnp.ones((8, 8))
+    params["odd"] = 0.1 * jnp.ones((4, 24))
+    state = tr.init(jax.random.PRNGKey(2), params)
+    step = tr.jit_step(donate=False)
+    state, _ = step(state, jnp.zeros(()))
+    assert any(len(gs) > 1 for _, gs in state["tiles"].class_index)
+    ckpt.save(state, str(tmp_path), step=1)
+
+    # ---- down-convert the written step to layout v3 ----
+    d = tmp_path / "step_000000001"
+    with open(d / "manifest.json") as f:
+        manifest = json.load(f)
+    classes = manifest.pop("tile_classes")
+    arrays = {}
+    for fname in sorted({m["file"] for m in manifest["arrays"].values()}):
+        with np.load(d / fname) as z:
+            arrays.update({k: z[k] for k in z.files})
+    new_arrays, new_meta = {}, {}
+    for key, meta in manifest["arrays"].items():
+        arr = arrays[meta["npz_key"]]
+        parts = key.split("/")
+        if len(parts) == 3 and parts[0] == "tiles" and parts[1] in classes:
+            for ci, g in enumerate(classes[parts[1]]["groups"]):
+                gkey = f"tiles/{g}/{parts[2]}"
+                garr = arr[ci]
+                safe = gkey.replace("/", "__")
+                new_arrays[safe] = garr
+                new_meta[gkey] = {"shape": list(garr.shape),
+                                  "dtype": meta["dtype"],
+                                  "file": "arrays_000.npz", "npz_key": safe,
+                                  "crc32": zlib.crc32(garr.tobytes())}
+        else:
+            new_arrays[meta["npz_key"]] = arr
+            new_meta[key] = {**meta, "file": "arrays_000.npz"}
+    for fname in {m["file"] for m in manifest["arrays"].values()}:
+        (d / fname).unlink()
+    np.savez(d / "arrays_000.npz", **new_arrays)
+    manifest["arrays"] = new_meta
+    manifest["layout"] = 3
+    with open(d / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+
+    restored = ckpt.restore(state, str(tmp_path), verify=True)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+        restored, state)
+    s2a, _ = step(state, jnp.zeros(()))
+    s2b, _ = step(restored, jnp.zeros(()))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+        s2a["tiles"], s2b["tiles"])
 
 
 def test_grouped_checkpoint_roundtrip(tmp_path):
