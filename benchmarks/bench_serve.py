@@ -1,0 +1,155 @@
+"""Serving benchmark: continuous batching vs the fixed-decode-batch driver.
+
+Both engines serve the same mixed-length trace (generations alternating
+short/long around ``--gen``) from the same weights.  The fixed driver decodes
+every group in lockstep for the *longest* generation in the group, so short
+requests ride along as dead lanes; the continuous engine frees their lanes
+and pages immediately and admits the next waiting prefill.  It also gets the
+harder arrival model: requests trickle in every ``--arrival-every`` steps,
+while the fixed driver batches as if all had arrived up front (an oracle
+assumption in the baseline's favor).
+
+Per engine the record captures tokens/s plus TTFT/TPOT p50/p99 (ms), and for
+the continuous engine the schema-validated run manifest.  Engines are warmed
+up (jit compile + one full trace) before the timed best-of-2 runs.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve --record --label pr7
+  PYTHONPATH=src python -m benchmarks.bench_serve --check       # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.serve import build_workload, run_fixed
+from repro.models.lm import LM
+from repro.serving import EngineConfig, ServeEngine, Telemetry
+
+_RECORD_FILE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serve.json")
+
+# the tracked smoke trace: 16 requests, generations alternating 6/48, one
+# arrival every 2 engine steps, 8 continuous lanes vs fixed batches of 8
+_TRACE = dict(requests=16, prompt_len=16, gen=27, gen_spread=21,
+              arrival_every=2)
+_LANES = 8
+_PAGE_SIZE = 16
+_CHECK_MIN_X = 1.2
+
+
+def _latency_ms(tel: Telemetry) -> Dict[str, Dict[str, float]]:
+    lat = tel.latency_summary()
+    return {k: {"p50": round(v["p50"] * 1e3, 2), "p99": round(v["p99"] * 1e3, 2)}
+            for k, v in lat.items() if k in ("ttft", "tpot")}
+
+
+def bench_serve(arch: str, *, trace: Dict = None, lanes: int = _LANES,
+                page_size: int = _PAGE_SIZE, runs: int = 2) -> Dict:
+    trace = dict(trace or _TRACE)
+    cfg = get_config(arch, smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    workload = lambda: build_workload(cfg, **trace)
+    max_gen = max(r.max_new_tokens for r in workload())
+    max_len = trace["prompt_len"] + max_gen
+    table_width = -(-max_len // page_size)
+    ecfg = EngineConfig(lanes=lanes, page_size=page_size,
+                        num_pages=lanes * table_width + 1, max_len=max_len)
+    engine = ServeEngine(model, params, ecfg, arch=cfg.name)
+
+    # warmup: one full trace through each engine (jit compile + caches);
+    # the fixed driver reuses its jitted fns across calls via `fns`
+    from repro.launch.serve import make_fixed_fns
+    fns = make_fixed_fns(model)
+    engine.run(workload())
+    run_fixed(model, params, workload(), batch=lanes, fns=fns)
+
+    best = {"continuous": None, "fixed": None}
+    for _ in range(runs):
+        engine.telemetry = Telemetry()          # fresh counters per timed run
+        results, summary = engine.run(workload())
+        cont = dict(tokens_per_s=round(summary["tokens_per_s"], 1),
+                    wall_s=round(summary["wall_s"], 3),
+                    steps=engine.telemetry.steps,
+                    latency_ms=_latency_ms(engine.telemetry))
+        if not best["continuous"] or cont["tokens_per_s"] > best["continuous"]["tokens_per_s"]:
+            best["continuous"] = cont
+            best["_n_tokens"] = sum(len(v) for v in results.values())
+
+        tel = Telemetry()
+        t0 = time.perf_counter()
+        run_fixed(model, params, workload(), batch=lanes, fns=fns,
+                  telemetry=tel)
+        wall = time.perf_counter() - t0
+        s = tel.run_summary(wall)
+        fixed = dict(tokens_per_s=round(s["tokens_per_s"], 1),
+                     wall_s=round(wall, 3), latency_ms=_latency_ms(tel))
+        if not best["fixed"] or fixed["tokens_per_s"] > best["fixed"]["tokens_per_s"]:
+            best["fixed"] = fixed
+
+    manifest = engine.telemetry.build_manifest(
+        arch=cfg.name, engine=engine.manifest_meta(),
+        checkpoint={"restored": False, "dir": "", "algorithm": ""},
+        wall_s=best["continuous"]["wall_s"])
+    return dict(
+        schema=1,
+        arch=cfg.name,
+        trace=trace,
+        engine=dict(lanes=lanes, page_size=page_size,
+                    num_pages=ecfg.num_pages, table_width=table_width),
+        generated_tokens=best.pop("_n_tokens"),
+        fixed=best["fixed"],
+        continuous=best["continuous"],
+        continuous_over_fixed=round(
+            best["continuous"]["tokens_per_s"]
+            / max(best["fixed"]["tokens_per_s"], 1e-9), 3),
+        manifest=manifest,
+    )
+
+
+def append_record(record: Dict, path: str = _RECORD_FILE) -> None:
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+    history.append(record)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--record", action="store_true",
+                    help="append the run to BENCH_serve.json at the repo root")
+    ap.add_argument("--label", default="dev",
+                    help="record label (e.g. pr7) written with --record")
+    ap.add_argument("--check", action="store_true",
+                    help=f"exit 1 when continuous tokens/s is below "
+                         f"{_CHECK_MIN_X}x the fixed-batch driver on the "
+                         f"tracked mixed-arrival smoke trace")
+    args = ap.parse_args()
+
+    r = bench_serve(args.arch)
+    r["label"] = args.label
+    r["date"] = time.strftime("%Y-%m-%d")
+    print(json.dumps(r, indent=2))
+    if args.record:
+        append_record(r)
+        print(f"appended record '{args.label}' to {_RECORD_FILE}")
+    if args.check and r["continuous_over_fixed"] < _CHECK_MIN_X:
+        print(f"FAIL: continuous engine is {r['continuous_over_fixed']:.2f}x "
+              f"the fixed-batch driver (< {_CHECK_MIN_X}x)", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

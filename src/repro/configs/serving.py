@@ -1,0 +1,33 @@
+"""Per-architecture serving defaults for the continuous-batching engine.
+
+The training-side ``ModelConfig`` stays serving-agnostic; these defaults map
+a model family onto engine knobs (decode lanes, KV page size).  Page size
+trades allocator granularity against gather width: recurrent/SSM families
+carry O(1) state per lane, so their "pages" only meter the few attention
+layers they mix in (or none at all — the allocator still bounds admission).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeDefaults:
+    lanes: int = 8
+    page_size: int = 16
+
+
+_FAMILY_DEFAULTS = {
+    "dense": ServeDefaults(lanes=8, page_size=16),
+    "moe": ServeDefaults(lanes=4, page_size=16),
+    "hybrid": ServeDefaults(lanes=8, page_size=16),
+    "ssm": ServeDefaults(lanes=16, page_size=32),
+    "audio": ServeDefaults(lanes=4, page_size=16),
+    "vlm": ServeDefaults(lanes=8, page_size=16),
+}
+
+
+def serve_defaults(cfg: ModelConfig) -> ServeDefaults:
+    return _FAMILY_DEFAULTS.get(cfg.family, ServeDefaults())

@@ -1,113 +1,209 @@
-"""Batched serving driver: continuous decode over a request queue.
+"""Serving driver CLI: continuous-batching decode over analog weights.
 
-Prefill-then-decode with a fixed decode batch; analog non-idealities apply
-to the *deployed* weights (effective analog weights + optional IO-quantized
-MVMs), which is the paper's deployment story: a model trained with E-RIDER
-serves from the same analog arrays.
+Two engines over the same workload:
 
-With ``--ckpt-dir`` the driver restores an analog TrainState written by
-``repro.launch.train`` (``--algorithm`` must name the same plan the
-checkpoint was trained under — single or mixed ``pattern=algorithm``
-form) and serves the *effective* analog weights, per-group under each
-stack's own TilePolicy.
+  --engine continuous (default) — the ``repro.serving`` engine: paged KV
+      cache (fixed-size pages, per-request alloc/free, scratch-page lanes),
+      per-step admission of waiting prefills into freed decode lanes,
+      prefill/decode disaggregation, per-request TTFT/TPOT latency
+      percentiles, structured JSON logs and a shutdown run manifest.
+  --engine fixed — the legacy fixed-decode-batch loop (kept as the
+      benchmark baseline): batches of ``--batch`` requests prefill together
+      and decode in lockstep for the longest generation in the batch.
+
+Analog non-idealities apply to the *deployed* weights: with ``--ckpt-dir``
+the driver restores an analog TrainState written by ``repro.launch.train``
+(``--algorithm`` must name the same plan — single or mixed
+``pattern=algorithm`` form) and serves the *effective* analog weights,
+per-group under each stack's own TilePolicy.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --requests 16 --prompt-len 32 --gen 32 \
-      [--ckpt-dir /tmp/ckpt --algorithm erider]
+      --requests 16 --prompt-len 32 --gen 32 --lanes 8 \
+      [--ckpt-dir /tmp/ckpt --algorithm erider] \
+      [--log-json serve_log.jsonl --manifest serve_manifest.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config
+from repro.configs.serving import serve_defaults
 from repro.data import BigramLM
 from repro.models.lm import LM
+from repro.serving import (EngineConfig, FeedBuilder, ServeEngine,
+                           ServeRequest, Telemetry, load_effective_params,
+                           sample_greedy)
 
 
-def _restore_effective_params(model: LM, args):
-    """Rebuild the training-time plan, restore the checkpoint through the
-    (re-keying) elastic restore path, and merge effective analog weights.
+def build_workload(cfg, requests: int, prompt_len: int, gen: int, seed: int = 3,
+                   gen_spread: int = 0, arrival_every: int = 0) -> List[ServeRequest]:
+    """Deterministic request trace: both engines consume the same prompts.
 
-    The restore template is built with ``abstract_state`` from
-    ``eval_shape``'d params — no throwaway tile/optimizer state is ever
-    materialized (at LM scale trainer.init would allocate several times
-    the served weights just to be overwritten)."""
-    from repro.checkpoint import ckpt
-    from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
-    from repro.core.trainer import AnalogTrainer, TrainerConfig, merge_effective
-    from repro.launch.train import make_plan
+    ``gen_spread`` alternates short/long generations around ``--gen``
+    (mixed-length trace); ``arrival_every`` staggers arrivals one request
+    every N engine steps (mixed-arrival trace — the fixed driver ignores
+    arrivals, an oracle assumption in its favor)."""
+    data = BigramLM(vocab=cfg.vocab, seed=seed)
+    out = []
+    for i in range(requests):
+        prompt = data.batch(i, 1, prompt_len)["tokens"][0].astype(np.int32)
+        n = gen if not gen_spread else max(1, gen + (gen_spread if i % 2 else -gen_spread))
+        out.append(ServeRequest(request_id=f"req{i:04d}", prompt=prompt,
+                                max_new_tokens=n,
+                                arrival_step=i * arrival_every))
+    return out
 
-    plan = make_plan(args.algorithm, args.smoke)
-    trainer = AnalogTrainer(
-        model.loss,
-        TrainerConfig(digital=DigitalOptConfig(kind="sgdm"),
-                      schedule=ScheduleConfig(kind="constant", base_lr=0.0)),
-        plan=plan)
-    aparams = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    template = trainer.abstract_state(aparams)
-    state = ckpt.restore(template, args.ckpt_dir)
-    print(f"[serve] restored step {int(np.asarray(state['step']))} from "
-          f"{args.ckpt_dir} | {trainer.describe_plan(aparams)}", flush=True)
-    return merge_effective(state["params"], state["tiles"], trainer.cfg.tile)
+
+def make_fixed_fns(model: LM):
+    """Jitted (prefill, step) pair for ``run_fixed`` — build once and pass
+    back in to reuse compile caches across calls (benchmark warmup)."""
+    return (jax.jit(model.prefill, donate_argnums=(2,)),
+            jax.jit(model.serve_step, donate_argnums=(2,)))
+
+
+def run_fixed(model: LM, params, workload: List[ServeRequest], batch: int,
+              telemetry: Optional[Telemetry] = None,
+              fns=None) -> Dict[str, np.ndarray]:
+    """The legacy fixed-decode-batch loop: FIFO groups of ``batch`` requests
+    prefill together and decode in lockstep until the longest generation in
+    the group completes (shorter requests ride along as dead lanes)."""
+    cfg = model.cfg
+    telemetry = telemetry or Telemetry()
+    feed_builder = FeedBuilder(cfg)
+    prefill, step = fns or make_fixed_fns(model)
+
+    for req in workload:
+        telemetry.request_submitted(req.request_id, req.prompt_len,
+                                    req.max_new_tokens, req.arrival_step)
+    results: Dict[str, np.ndarray] = {}
+    for start in range(0, len(workload), batch):
+        group = workload[start:start + batch]
+        pad = batch - len(group)
+        prompts = np.stack([r.prompt for r in group] + [group[0].prompt] * pad)
+        S = prompts.shape[1]
+        gen = max(r.max_new_tokens for r in group)
+        cache = model.init_cache(batch, S + gen,
+                                 enc_len=S if cfg.is_encdec else 0)
+        logits, cache = prefill(params, feed_builder(prompts), cache)
+        tok = sample_greedy(logits)
+        out = [np.asarray(tok)]
+        for r in group:
+            telemetry.first_token(r.request_id)
+        for i in range(gen - 1):
+            tok, cache = step(params, tok, cache, jnp.int32(S + i))
+            out.append(np.asarray(tok))
+            for r in group:
+                if i + 2 <= r.max_new_tokens:
+                    telemetry.token(r.request_id)
+        seq = np.concatenate(out, axis=1)
+        for lane, r in enumerate(group):
+            results[r.request_id] = seq[lane, :r.max_new_tokens].astype(np.int32)
+            telemetry.request_finished(r.request_id, lane, start // batch)
+    return results
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen2-0.5b")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=("continuous", "fixed"), default="continuous")
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="decode batch of the fixed engine")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--gen-spread", type=int, default=0,
+                    help="alternate gen +/- spread (mixed-length trace)")
+    ap.add_argument("--arrival-every", type=int, default=0,
+                    help="stagger arrivals every N engine steps")
+    ap.add_argument("--lanes", type=int, default=0,
+                    help="decode lanes (0 = per-arch serving default)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV page size in tokens (0 = per-arch default)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV pool pages per layer (0 = sized from workload)")
     ap.add_argument("--ckpt-dir", default="",
                     help="serve effective analog weights from this "
                          "repro.launch.train checkpoint")
     ap.add_argument("--algorithm", default="erider",
                     help="plan of the checkpoint (see repro.launch.train)")
+    ap.add_argument("--log-json", default="", help="JSON log lines path")
+    ap.add_argument("--manifest", default="", help="run manifest path")
+    ap.add_argument("--dump-tokens", default="",
+                    help="write {request_id: tokens} JSON (regression tests)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = LM(cfg)
     if args.ckpt_dir:
-        params = _restore_effective_params(model, args)
+        params = load_effective_params(model, args.ckpt_dir, args.algorithm,
+                                       args.smoke)
     else:
         params = model.init(jax.random.PRNGKey(0))
-    data = BigramLM(vocab=cfg.vocab, seed=3)
 
-    prefill = jax.jit(model.prefill, donate_argnums=(2,))
-    step = jax.jit(model.serve_step, donate_argnums=(2,))
+    workload = build_workload(cfg, args.requests, args.prompt_len, args.gen,
+                              gen_spread=args.gen_spread,
+                              arrival_every=args.arrival_every)
+    max_gen = max(r.max_new_tokens for r in workload)
+    engine_mode = args.engine
+    if engine_mode == "continuous" and cfg.is_encdec:
+        print("[serve] enc-dec arch: falling back to the fixed-batch engine")
+        engine_mode = "fixed"
 
-    max_len = args.prompt_len + args.gen
-    total_tokens = 0
-    t0 = time.time()
-    n_batches = (args.requests + args.batch - 1) // args.batch
-    for b in range(n_batches):
-        batch = data.batch(b, args.batch, args.prompt_len)
-        toks = jnp.asarray(batch["tokens"])
-        feed = {"tokens": toks}
-        if cfg.frontend:
-            feed["frames"] = jnp.zeros(
-                (args.batch, args.prompt_len, cfg.d_model), cfg.dtype)
-        cache = model.init_cache(args.batch, max_len,
-                                 enc_len=args.prompt_len if cfg.is_encdec else 0)
-        logits, cache = prefill(params, feed, cache)
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        out = [np.asarray(tok)]
-        for i in range(args.gen - 1):
-            tok, cache = step(params, tok, cache, jnp.int32(args.prompt_len + i))
-            out.append(np.asarray(tok))
-        total_tokens += args.batch * args.gen
-        seq = np.concatenate(out, axis=1)
-        print(f"[serve] batch {b}: generated {seq.shape} first row: {seq[0, :12]}")
-    dt = time.time() - t0
-    print(f"[serve] {total_tokens} tokens in {dt:.2f}s -> "
-          f"{total_tokens / dt:.1f} tok/s (CPU smoke)")
+    defaults = serve_defaults(cfg)
+    t0 = time.monotonic()
+    if engine_mode == "continuous":
+        lanes = args.lanes or defaults.lanes
+        page_size = args.page_size or defaults.page_size
+        max_len = args.prompt_len + max_gen
+        table_width = -(-max_len // page_size)
+        num_pages = args.num_pages or (lanes * table_width + 1)
+        ecfg = EngineConfig(lanes=lanes, page_size=page_size,
+                            num_pages=num_pages, max_len=max_len,
+                            log_path=args.log_json,
+                            manifest_path=args.manifest)
+        engine = ServeEngine(model, params, ecfg, arch=cfg.name,
+                             checkpoint={"restored": bool(args.ckpt_dir),
+                                         "dir": args.ckpt_dir,
+                                         "algorithm": args.algorithm})
+        results, summary = engine.run(workload)
+        lat = engine.telemetry.latency_summary()
+        print(f"[serve] continuous: {summary['generated_tokens']} tokens in "
+              f"{summary['wall_s']:.2f}s -> {summary['tokens_per_s']:.1f} tok/s | "
+              f"ttft p50/p99 {lat['ttft']['p50'] * 1e3:.1f}/{lat['ttft']['p99'] * 1e3:.1f} ms | "
+              f"tpot p50/p99 {lat['tpot']['p50'] * 1e3:.1f}/{lat['tpot']['p99'] * 1e3:.1f} ms")
+    else:
+        telemetry = Telemetry(log_path=args.log_json)
+        results = run_fixed(model, params, workload, args.batch, telemetry)
+        wall = time.monotonic() - t0
+        summary = telemetry.run_summary(wall)
+        if args.manifest:
+            telemetry.write_manifest(
+                args.manifest, arch=cfg.name,
+                engine={"mode": "fixed", "lanes": args.batch,
+                        "page_size": args.prompt_len + max_gen, "num_pages": 2,
+                        "table_width": 1},
+                checkpoint={"restored": bool(args.ckpt_dir),
+                            "dir": args.ckpt_dir, "algorithm": args.algorithm},
+                wall_s=wall)
+        telemetry.close()
+        print(f"[serve] fixed: {summary['generated_tokens']} tokens in "
+              f"{summary['wall_s']:.2f}s -> {summary['tokens_per_s']:.1f} tok/s")
+
+    if args.dump_tokens:
+        with open(args.dump_tokens, "w") as f:
+            json.dump({k: np.asarray(v).tolist() for k, v in results.items()},
+                      f, sort_keys=True)
+    first = workload[0].request_id
+    print(f"[serve] {first} first tokens: {np.asarray(results[first])[:12]}")
 
 
 if __name__ == "__main__":

@@ -278,6 +278,31 @@ def decode_attention(q, k, v, *, k_pos, pos, window: int = 0):
     return out.reshape(B, 1, H, Dv).astype(q.dtype)
 
 
+def decode_attention_lanes(q, k, v, *, k_pos, pos, window: int = 0):
+    """Single-token attention where every lane sits at its own position.
+
+    Same math as ``decode_attention`` but with per-lane masking, for the
+    continuous-batching serve engine: k_pos is (B, Sc) logical positions
+    per lane (-1 = empty slot) and pos is (B,) the position each lane is
+    writing this step.
+    """
+    B, _, H, Dk = q.shape
+    _, Sc, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    qg = (q.astype(jnp.float32) * (Dk ** -0.5)).reshape(B, KV, G, Dk)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    valid = (k_pos >= 0) & (k_pos <= pos[:, None])
+    if window and window > 0:
+        valid = valid & (k_pos > (pos[:, None] - window))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # GQA full-sequence + decode
 # ---------------------------------------------------------------------------
@@ -381,6 +406,85 @@ def make_attn_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int, abstr
     c = {n: jnp.zeros(s, dt) for n, (s, dt) in shapes.items()}
     c["pos"] = jnp.full((Sc,), -1, jnp.int32)
     return c
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (continuous-batching serve engine)
+# ---------------------------------------------------------------------------
+#
+# The pool holds ``num_pages`` fixed-size pages shared by every lane; a page
+# table row (per lane) maps logical slot j -> physical slot
+# table[j // page_size] * page_size + j % page_size.  Page 0 is reserved as a
+# scratch page: free lanes point their whole table row at it, so their decode
+# writes land in storage no active lane ever gathers.
+
+
+def make_paged_attn_cache(cfg: ModelConfig, num_pages: int, page_size: int, abstract=False):
+    KV, D = cfg.n_kv, cfg.head_dim
+    shapes = {
+        "kp": ((num_pages, page_size, KV, D), cfg.dtype),
+        "vp": ((num_pages, page_size, KV, D), cfg.dtype),
+    }
+    if abstract:
+        return {n: jax.ShapeDtypeStruct(s, dt) for n, (s, dt) in shapes.items()}
+    return {n: jnp.zeros(s, dt) for n, (s, dt) in shapes.items()}
+
+
+def attn_decode_paged(p, x, cfg: ModelConfig, *, kind: str, pos, table, cache):
+    """One-token decode against a paged KV pool.
+
+    x: (B,1,d); pos: (B,) per-lane write position; table: (B,T) page table;
+    cache: {'kp','vp': (P, page_size, KV, D)} shared pools.  Writes this
+    token's K/V into each lane's page slot, then gathers the lane's pages
+    back into a (B, T*page_size, KV, D) view for ``decode_attention_lanes``.
+    """
+    B = x.shape[0]
+    q, k, v = _qkv(p, x, cfg)
+    q, k = _rope_qk(q, k, pos[:, None], cfg)
+    P, ps = cache["kp"].shape[0], cache["kp"].shape[1]
+    kflat = cache["kp"].reshape(P * ps, *cache["kp"].shape[2:])
+    vflat = cache["vp"].reshape(P * ps, *cache["vp"].shape[2:])
+    # scatter: free lanes all collide on the scratch page — harmless
+    widx = table[jnp.arange(B), pos // ps] * ps + pos % ps
+    kflat = kflat.at[widx].set(k[:, 0].astype(kflat.dtype))
+    vflat = vflat.at[widx].set(v[:, 0].astype(vflat.dtype))
+    # gather every lane's pages into a contiguous logical view
+    T = table.shape[1]
+    gidx = (table[:, :, None] * ps + jnp.arange(ps)[None, None, :]).reshape(B, T * ps)
+    kl, vl = kflat[gidx], vflat[gidx]
+    k_pos = jnp.broadcast_to(jnp.arange(T * ps, dtype=jnp.int32)[None], (B, T * ps))
+    window = cfg.window if kind == "attn_local" else 0
+    out = decode_attention_lanes(q, kl, vl, k_pos=k_pos, pos=pos, window=window)
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    return out, dict(cache, kp=kflat.reshape(cache["kp"].shape),
+                     vp=vflat.reshape(cache["vp"].shape))
+
+
+def commit_prefill_pages(cache, dense, idx, *, stacked: bool):
+    """Scatter a batch-1 dense prefill cache {'k','v','pos'} into the paged
+    pools.  ``idx`` (S,) maps logical position j to its flat physical slot
+    (page-table row expanded); the dense 'pos' leaf routes ring-ordered
+    sliding-window caches (slot order != logical order, invalid slots = -1,
+    which land on the scratch page).  ``stacked`` marks body leaves carrying
+    a leading scan (period) axis — every period layer saw the same positions,
+    so one routing row serves the whole stack."""
+    kp, vp = cache["kp"], cache["vp"]
+    pos_leaf = dense["pos"][0] if stacked else dense["pos"]   # (Sc,)
+    valid = pos_leaf >= 0
+    tgt = jnp.where(valid, idx[jnp.clip(pos_leaf, 0)], 0)
+    if stacked:
+        n, P, ps = kp.shape[0], kp.shape[1], kp.shape[2]
+        kflat = kp.reshape(n, P * ps, *kp.shape[3:]).at[:, tgt].set(
+            dense["k"][:, 0].astype(kp.dtype))
+        vflat = vp.reshape(n, P * ps, *vp.shape[3:]).at[:, tgt].set(
+            dense["v"][:, 0].astype(vp.dtype))
+    else:
+        P, ps = kp.shape[0], kp.shape[1]
+        kflat = kp.reshape(P * ps, *kp.shape[2:]).at[tgt].set(
+            dense["k"][0].astype(kp.dtype))
+        vflat = vp.reshape(P * ps, *vp.shape[2:]).at[tgt].set(
+            dense["v"][0].astype(vp.dtype))
+    return dict(cache, kp=kflat.reshape(kp.shape), vp=vflat.reshape(vp.shape))
 
 
 # ---------------------------------------------------------------------------
@@ -503,6 +607,69 @@ def make_mla_cache(cfg: ModelConfig, batch: int, seq_len: int, abstract=False):
     c = {n: jnp.zeros(s, dt) for n, (s, dt) in shapes.items()}
     c["pos"] = jnp.full((seq_len,), -1, jnp.int32)
     return c
+
+
+def make_mla_lane_cache(cfg: ModelConfig, lanes: int, max_len: int, abstract=False):
+    """Per-lane dense latent cache for the serve engine (the MLA latent is
+    already ~20x smaller than expanded K/V, so lanes stay dense; only the
+    position row is per-lane so lane reuse can invalidate stale slots)."""
+    shapes = {
+        "ckv": ((lanes, max_len, cfg.kv_lora), cfg.dtype),
+        "kpe": ((lanes, max_len, cfg.qk_rope), cfg.dtype),
+        "pos": ((lanes, max_len), jnp.int32),
+    }
+    if abstract:
+        return {n: jax.ShapeDtypeStruct(s, dt) for n, (s, dt) in shapes.items()}
+    c = {n: jnp.zeros(s, dt) for n, (s, dt) in shapes.items()}
+    c["pos"] = jnp.full((lanes, max_len), -1, jnp.int32)
+    return c
+
+
+def mla_decode_lanes(p, x, cfg: ModelConfig, *, pos, cache):
+    """Weight-absorbed latent decode with per-lane positions (B,)."""
+    B = x.shape[0]
+    H, nope, v_dim, kvl = cfg.n_heads, cfg.qk_nope, cfg.v_head_dim, cfg.kv_lora
+    posb = pos[:, None]
+    q_nope, q_pe = _mla_q(p, x, cfg, posb)
+    ckv_t, kpe_t = _mla_kv_latent(p, x, cfg, posb)
+    bidx = jnp.arange(B)
+    ckv = cache["ckv"].at[bidx, pos].set(ckv_t[:, 0].astype(cache["ckv"].dtype))
+    kpe = cache["kpe"].at[bidx, pos].set(kpe_t[:, 0].astype(cache["kpe"].dtype))
+    kpos = cache["pos"].at[bidx, pos].set(pos.astype(jnp.int32))
+
+    wuk = p["wuk"].reshape(kvl, H, nope)
+    q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope.astype(jnp.float32), wuk.astype(jnp.float32))
+    scale = (nope + cfg.qk_rope) ** -0.5
+    s = jnp.einsum("bqhk,bsk->bhqs", q_lat, ckv.astype(jnp.float32)) + jnp.einsum(
+        "bqhr,bsr->bhqs", q_pe.astype(jnp.float32), kpe.astype(jnp.float32))
+    s = s * scale
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsk->bqhk", pattn, ckv.astype(jnp.float32))
+    wuv = p["wuv"].reshape(kvl, H, v_dim)
+    out = jnp.einsum("bqhk,khv->bqhv", o_lat, wuv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * v_dim).astype(x.dtype) @ p["wo"]
+    return out, dict(cache, ckv=ckv, kpe=kpe, pos=kpos)
+
+
+def commit_prefill_mla(cache, dense, lane, *, stacked: bool):
+    """Write a batch-1 dense MLA prefill cache into one lane's row, stamping
+    -1 into position slots past the prompt so a reused lane never attends to
+    the previous occupant's cache."""
+    S = dense["ckv"].shape[-2]
+    L = cache["pos"].shape[-1]
+    row_pos = jnp.where(jnp.arange(L, dtype=jnp.int32) < S,
+                        jnp.arange(L, dtype=jnp.int32), jnp.int32(-1))
+    if stacked:
+        ckv = cache["ckv"].at[:, lane, :S].set(dense["ckv"][:, 0].astype(cache["ckv"].dtype))
+        kpe = cache["kpe"].at[:, lane, :S].set(dense["kpe"][:, 0].astype(cache["kpe"].dtype))
+        kpos = cache["pos"].at[:, lane].set(row_pos[None])
+    else:
+        ckv = cache["ckv"].at[lane, :S].set(dense["ckv"][0].astype(cache["ckv"].dtype))
+        kpe = cache["kpe"].at[lane, :S].set(dense["kpe"][0].astype(cache["kpe"].dtype))
+        kpos = cache["pos"].at[lane].set(row_pos)
+    return dict(cache, ckv=ckv, kpe=kpe, pos=kpos)
 
 
 # ---------------------------------------------------------------------------

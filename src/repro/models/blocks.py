@@ -95,11 +95,13 @@ def apply_layer(
     pos=None,
     enc_out=None,
     causal: bool = True,
+    table=None,                # (B,T) page table -> paged per-lane decode
 ) -> Tuple[Any, jnp.ndarray, Optional[Dict]]:
     """Returns (x_out, aux_loss, new_cache)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Any] = dict(cache) if cache is not None else {}
     rs = cfg.residual_scale
+    lanes = table is not None
 
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if kind in ("attn", "attn_local"):
@@ -108,6 +110,9 @@ def apply_layer(
         elif mode == "prefill":
             mix, new_cache["kv"] = attn.attn_prefill(p["attn"], h, cfg, kind=kind,
                                                      positions=positions, cache=cache["kv"])
+        elif lanes:
+            mix, new_cache["kv"] = attn.attn_decode_paged(p["attn"], h, cfg, kind=kind,
+                                                          pos=pos, table=table, cache=cache["kv"])
         else:
             mix, new_cache["kv"] = attn.attn_decode(p["attn"], h, cfg, kind=kind,
                                                     pos=pos, cache=cache["kv"])
@@ -117,6 +122,9 @@ def apply_layer(
         elif mode == "prefill":
             mix, new_cache["kv"] = attn.mla_prefill(p["attn"], h, cfg,
                                                     positions=positions, cache=cache["kv"])
+        elif lanes:
+            mix, new_cache["kv"] = attn.mla_decode_lanes(p["attn"], h, cfg,
+                                                         pos=pos, cache=cache["kv"])
         else:
             mix, new_cache["kv"] = attn.mla_decode(p["attn"], h, cfg, pos=pos, cache=cache["kv"])
     elif kind == "rec":
@@ -241,6 +249,99 @@ def init_stack_cache(cfg: ModelConfig, batch: int, seq_len: int, *, enc_len=0,
     return cache
 
 
+# ---------------------------------------------------------------------------
+# paged decode caches (continuous-batching serve engine)
+# ---------------------------------------------------------------------------
+#
+# Layout per layer kind:
+#   attn/attn_local — shared page pools (num_pages, page_size, KV, D); all
+#                     layers index the same per-lane page-table row.
+#   mla             — per-lane dense latent rows (lanes, max_len, ...) with a
+#                     per-lane position row for stale-slot invalidation.
+#   rec/ssm         — per-lane recurrent state, identical to the dense cache.
+
+
+def make_paged_layer_cache(cfg: ModelConfig, kind: str, lanes: int, num_pages: int,
+                           page_size: int, max_len: int, abstract=False) -> Dict:
+    c: Dict[str, Any] = {}
+    if kind in ("attn", "attn_local"):
+        c["kv"] = attn.make_paged_attn_cache(cfg, num_pages, page_size, abstract)
+    elif kind == "mla":
+        c["kv"] = attn.make_mla_lane_cache(cfg, lanes, max_len, abstract)
+    elif kind == "rec":
+        c["state"] = rec_mod.make_rglru_state(cfg, lanes, abstract)
+    elif kind == "ssm":
+        c["state"] = rec_mod.make_ssm_state(cfg, lanes, abstract)
+    return c
+
+
+def init_paged_stack_cache(cfg: ModelConfig, lanes: int, num_pages: int,
+                           page_size: int, max_len: int, abstract=False) -> Dict:
+    prefix, period, tail, n_periods = stack_structure(cfg)
+    cache: Dict[str, Any] = {"prefix": {}, "body": {}, "tail": {}}
+
+    def one(kind):
+        return make_paged_layer_cache(cfg, kind, lanes, num_pages, page_size,
+                                      max_len, abstract)
+
+    for i, kind in enumerate(prefix):
+        cache["prefix"][f"l{i}"] = one(kind)
+    for j, kind in enumerate(period):
+        if n_periods == 0:
+            continue
+
+        def stack_leaf(leaf):
+            if abstract:
+                return jax.ShapeDtypeStruct((n_periods,) + leaf.shape, leaf.dtype)
+            return jnp.broadcast_to(leaf[None], (n_periods,) + leaf.shape).copy()
+
+        cache["body"][f"p{j}"] = jax.tree.map(stack_leaf, one(kind))
+    for i, kind in enumerate(tail):
+        cache["tail"][f"l{i}"] = one(kind)
+    return cache
+
+
+def commit_layer_prefill(cfg: ModelConfig, kind: str, paged: Dict, dense: Dict,
+                         idx, lane, *, stacked: bool) -> Dict:
+    """Write one layer's batch-1 dense prefill cache into the paged cache:
+    K/V pages at flat slots ``idx`` (S,), lane-dense state at row ``lane``."""
+    if kind in ("attn", "attn_local"):
+        return dict(paged, kv=attn.commit_prefill_pages(paged["kv"], dense["kv"],
+                                                        idx, stacked=stacked))
+    if kind == "mla":
+        return dict(paged, kv=attn.commit_prefill_mla(paged["kv"], dense["kv"],
+                                                      lane, stacked=stacked))
+    # rec / ssm: overwrite the lane's recurrent state
+    if stacked:
+        state = jax.tree.map(lambda lc, dc: lc.at[:, lane].set(dc[:, 0].astype(lc.dtype)),
+                             paged["state"], dense["state"])
+    else:
+        state = jax.tree.map(lambda lc, dc: lc.at[lane].set(dc[0].astype(lc.dtype)),
+                             paged["state"], dense["state"])
+    return dict(paged, state=state)
+
+
+def commit_stack_prefill(cfg: ModelConfig, paged: Dict, dense: Dict, idx, lane) -> Dict:
+    """Walk the stack structure and commit every layer's prefill cache."""
+    prefix, period, tail, n_periods = stack_structure(cfg)
+    out: Dict[str, Any] = {"prefix": {}, "body": {}, "tail": {}}
+    for i, kind in enumerate(prefix):
+        out["prefix"][f"l{i}"] = commit_layer_prefill(
+            cfg, kind, paged["prefix"][f"l{i}"], dense["prefix"][f"l{i}"],
+            idx, lane, stacked=False)
+    for j, kind in enumerate(period):
+        if n_periods == 0:
+            continue
+        out["body"][f"p{j}"] = commit_layer_prefill(
+            cfg, kind, paged["body"][f"p{j}"], dense["body"][f"p{j}"],
+            idx, lane, stacked=True)
+    for i, kind in enumerate(tail):
+        out["tail"][f"l{i}"] = commit_layer_prefill(
+            cfg, kind, paged["tail"][f"l{i}"], dense["tail"][f"l{i}"],
+            idx, lane, stacked=False)
+    return out
+
+
 def apply_stack(
     params: Dict,
     x,
@@ -252,6 +353,7 @@ def apply_stack(
     pos=None,
     enc_out=None,
     causal: bool = True,
+    table=None,
 ) -> Tuple[Any, jnp.ndarray, Optional[Dict]]:
     prefix, period, tail, n_periods = stack_structure(cfg)
     aux_total = jnp.zeros((), jnp.float32)
@@ -259,7 +361,8 @@ def apply_stack(
 
     def run_layer(p, x, kind, cache):
         return apply_layer(p, x, cfg, kind, mode, positions=positions,
-                           cache=cache, pos=pos, enc_out=enc_out, causal=causal)
+                           cache=cache, pos=pos, enc_out=enc_out, causal=causal,
+                           table=table)
 
     # ---- prefix (unrolled)
     for i, kind in enumerate(prefix):

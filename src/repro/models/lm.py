@@ -123,9 +123,50 @@ class LM:
 
     def serve_step(self, params, token, cache: Dict, pos):
         """Greedy one-token serving step (what decode-shape cells lower)."""
+        from repro.serving.sampling import sample_greedy
+
         logits, cache = self.decode_step(params, token, cache, pos)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        return nxt, cache
+        return sample_greedy(logits), cache
+
+    # ------------------------------------------------------- paged serving
+    def init_paged_cache(self, lanes: int, num_pages: int, page_size: int,
+                         max_len: int, abstract=False) -> Dict:
+        """Decode cache for the continuous-batching serve engine: shared KV
+        page pools for attention layers (page 0 reserved as scratch),
+        per-lane rows for MLA latents and recurrent state."""
+        from .blocks import init_paged_stack_cache
+
+        if self.cfg.is_encdec:
+            raise NotImplementedError("paged serving supports decoder-only models")
+        return init_paged_stack_cache(self.cfg, lanes, num_pages, page_size,
+                                      max_len, abstract=abstract)
+
+    def commit_prefill(self, paged: Dict, dense: Dict, table_row, lane, *,
+                       prompt_len: int, page_size: int) -> Dict:
+        """Gather-free handoff from a batch-1 dense prefill cache into the
+        paged cache: prompt K/V scattered to the lane's pages (flat slot of
+        logical j = table_row[j // page_size]*page_size + j % page_size),
+        lane-dense leaves written at row ``lane``."""
+        from .blocks import commit_stack_prefill
+
+        idx = (table_row[:, None] * page_size +
+               jnp.arange(page_size, dtype=jnp.int32)[None, :]).reshape(-1)[:prompt_len]
+        return commit_stack_prefill(self.cfg, paged, dense, idx, lane)
+
+    def decode_step_lanes(self, params, token, cache: Dict, table, pos):
+        """Per-lane decode: token (B,1); table (B,T) page tables; pos (B,)
+        per-lane write positions (free lanes point at the scratch page)."""
+        cfg = self.cfg
+        x = self._embed(params, token)
+        x, _, cache = apply_stack(params["stack"], x, cfg, "decode",
+                                  caches=cache, pos=pos, table=table)
+        return self._logits(params, x), cache
+
+    def serve_step_lanes(self, params, token, cache: Dict, table, pos):
+        from repro.serving.sampling import sample_greedy
+
+        logits, cache = self.decode_step_lanes(params, token, cache, table, pos)
+        return sample_greedy(logits), cache
 
 
 def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:

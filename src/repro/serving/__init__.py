@@ -1,0 +1,21 @@
+"""Continuous-batching analog serving engine.
+
+Layers (each independently testable):
+  kv_pages   — fixed-size KV page accounting: PageAllocator (alloc/free per
+               request, leak/double-free checked) + page-table index math.
+  scheduler  — per-step admission of waiting prefills into freed decode
+               lanes (FIFO, head-of-line page budgeting, no starvation).
+  sampling   — sample_greedy + FeedBuilder shared by every serve driver.
+  telemetry  — per-request TTFT/TPOT, p50/p99 percentiles, structured JSON
+               logging and the shutdown run-artifact manifest.
+  schema     — checked-in schemas for log lines + manifest, dependency-free
+               validator.
+  engine     — ServeEngine: drives prefill/decode disaggregation over the
+               paged caches in models/lm.py and restores analog checkpoints
+               through the elastic re-key path.
+"""
+from .engine import EngineConfig, ServeEngine, ServeRequest, load_effective_params  # noqa: F401
+from .kv_pages import PageAllocator, needed_pages  # noqa: F401
+from .sampling import FeedBuilder, sample_greedy  # noqa: F401
+from .scheduler import ContinuousScheduler  # noqa: F401
+from .telemetry import Telemetry  # noqa: F401

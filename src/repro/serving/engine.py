@@ -1,0 +1,231 @@
+"""ServeEngine: continuous batching over the paged analog decode caches.
+
+Prefill/decode disaggregation: prefills run as dedicated batch-1 calls
+through the model's dense prefill path (reusing the exact math of the
+training-time forward), then hand their KV off to the paged pools via the
+gather-free ``commit_prefill`` scatter.  Decode runs one jitted
+``serve_step_lanes`` per engine step across all lanes — every lane at its
+own position, free lanes pointed at the scratch page — so a freed lane
+admits the oldest waiting prefill on the next step without recompiling or
+reshaping anything.
+
+The engine serves the *effective* analog weights: ``load_effective_params``
+restores a training checkpoint through the elastic re-key path and merges
+tile state per-TilePolicy (the paper's deployment story — the arrays that
+trained are the arrays that serve).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kv_pages import PageAllocator, SCRATCH_PAGE, needed_pages
+from .sampling import FeedBuilder, sample_greedy
+from .scheduler import ContinuousScheduler, DECODE, ServeRequest
+from .telemetry import Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    lanes: int = 8
+    page_size: int = 16
+    num_pages: int = 128          # shared pool per attention layer (incl. scratch)
+    max_len: int = 256            # per-request prompt + generation bound
+    stats_every: int = 0          # emit engine_stats every N steps (0 = off)
+    log_path: str = ""            # JSON log lines (one object per line)
+    manifest_path: str = ""       # run-artifact manifest written at shutdown
+
+    @property
+    def table_width(self) -> int:
+        return needed_pages(self.max_len, self.page_size)
+
+
+def load_effective_params(model, ckpt_dir: str, algorithm: str, smoke: bool):
+    """Rebuild the training-time plan, restore the checkpoint through the
+    (re-keying) elastic restore path, and merge effective analog weights.
+
+    The restore template is built with ``abstract_state`` from
+    ``eval_shape``'d params — no throwaway tile/optimizer state is ever
+    materialized (at LM scale trainer.init would allocate several times
+    the served weights just to be overwritten)."""
+    from repro.checkpoint import ckpt
+    from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
+    from repro.core.trainer import AnalogTrainer, TrainerConfig, merge_effective
+    from repro.launch.train import make_plan
+
+    plan = make_plan(algorithm, smoke)
+    trainer = AnalogTrainer(
+        model.loss,
+        TrainerConfig(digital=DigitalOptConfig(kind="sgdm"),
+                      schedule=ScheduleConfig(kind="constant", base_lr=0.0)),
+        plan=plan)
+    aparams = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    template = trainer.abstract_state(aparams)
+    state = ckpt.restore(template, ckpt_dir)
+    print(f"[serve] restored step {int(np.asarray(state['step']))} from "
+          f"{ckpt_dir} | {trainer.describe_plan(aparams)}", flush=True)
+    return merge_effective(state["params"], state["tiles"], trainer.cfg.tile)
+
+
+class ServeEngine:
+    def __init__(self, model, params, ecfg: EngineConfig,
+                 telemetry: Optional[Telemetry] = None, arch: str = "",
+                 checkpoint: Optional[Dict[str, Any]] = None):
+        if model.cfg.is_encdec:
+            raise NotImplementedError(
+                "continuous batching supports decoder-only models; use the "
+                "fixed-batch driver for enc-dec archs")
+        self.model = model
+        self.params = params
+        self.ecfg = ecfg
+        self.arch = arch or model.cfg.name
+        self.checkpoint = checkpoint or {"restored": False, "dir": "", "algorithm": ""}
+        self.telemetry = telemetry or Telemetry(log_path=ecfg.log_path)
+
+        self.allocator = PageAllocator(ecfg.num_pages, reserved=1)
+        self.scheduler = ContinuousScheduler(
+            ecfg.lanes, self.allocator, ecfg.page_size, ecfg.table_width)
+        self._feed = FeedBuilder(model.cfg)
+
+        self._paged = model.init_paged_cache(
+            ecfg.lanes, ecfg.num_pages, ecfg.page_size, ecfg.max_len)
+
+        # one jitted call per admission: the batch-1 dense cache is created
+        # *inside* the trace (free zeros, no per-leaf host allocation), the
+        # first token is sampled in-graph, and the KV lands in the pages —
+        # no intermediate dense cache ever leaves the device
+        def prefill_commit(params, feed, paged, row, lane, *, prompt_len,
+                           page_size):
+            dense = model.init_cache(1, prompt_len)
+            logits, dense = model.prefill(params, feed, dense)
+            tok = sample_greedy(logits)
+            paged = model.commit_prefill(paged, dense, row, lane,
+                                         prompt_len=prompt_len,
+                                         page_size=page_size)
+            return tok, paged
+
+        self._prefill_commit = jax.jit(
+            prefill_commit, static_argnames=("prompt_len", "page_size"),
+            donate_argnums=(2,))
+
+        # the decode step advances every lane's position on-device; free
+        # lanes drift past their (all-scratch) table rows, which is
+        # harmless — their writes/reads clamp to the scratch page and their
+        # outputs are discarded — and admission rewrites their rows anyway
+        def step_fn(params, last, cache, table, pos):
+            toks, cache = model.serve_step_lanes(params, last, cache, table,
+                                                 pos)
+            return toks, cache, pos + 1
+
+        self._step = jax.jit(step_fn, donate_argnums=(2,))
+
+        # host-side lane state, mirrored on device between admissions so
+        # steady-state decode re-uses device arrays instead of re-uploading
+        T = ecfg.table_width
+        self._table = np.full((ecfg.lanes, T), SCRATCH_PAGE, np.int32)
+        self._pos = np.zeros((ecfg.lanes,), np.int32)
+        self._last = np.zeros((ecfg.lanes, 1), np.int32)
+        self._dev = None          # (last, table, pos) device mirrors
+        self._dirty = True        # lane state changed since last upload
+
+    # ----------------------------------------------------------------- run
+    def submit(self, req: ServeRequest) -> None:
+        self.scheduler.submit(req)
+        self.telemetry.request_submitted(req.request_id, req.prompt_len,
+                                         req.max_new_tokens, req.arrival_step)
+
+    def _finish(self, lane: int, step: int) -> None:
+        req = self.scheduler.release(lane)
+        self.telemetry.request_finished(req.request_id, lane, step)
+        self._table[lane] = SCRATCH_PAGE
+        self._pos[lane] = 0
+        self._last[lane] = 0
+        self._dirty = True
+
+    def _admit_and_prefill(self, step: int) -> None:
+        for adm in self.scheduler.admit(step):
+            req, lane = adm.request, adm.lane
+            self.telemetry.request_admitted(req.request_id, lane,
+                                            len(adm.pages), step)
+            row = self.scheduler.table_row(req)
+            tok, self._paged = self._prefill_commit(
+                self.params, self._feed(req.prompt[None]), self._paged,
+                jnp.asarray(row), lane, prompt_len=req.prompt_len,
+                page_size=self.ecfg.page_size)
+            self.telemetry.prefills += 1
+            first = int(np.asarray(tok)[0, 0])
+            req.tokens.append(first)
+            req.state = DECODE
+            self.telemetry.first_token(req.request_id)
+            self._table[lane] = row
+            self._pos[lane] = req.prompt_len
+            self._last[lane, 0] = first
+            self._dirty = True
+            if len(req.tokens) >= req.max_new_tokens:
+                self._finish(lane, step)
+
+    def _decode_once(self, step: int) -> None:
+        active = self.scheduler.active()
+        if not active:
+            return
+        if self._dirty:
+            self._dev = (jnp.asarray(self._last), jnp.asarray(self._table),
+                         jnp.asarray(self._pos))
+            self._dirty = False
+        last, table, pos = self._dev
+        toks, self._paged, pos = self._step(self.params, last, self._paged,
+                                            table, pos)
+        self._dev = (toks, table, pos)
+        host_toks = np.asarray(toks)
+        self.telemetry.steps += 1
+        for lane, req in active.items():
+            tok = int(host_toks[lane, 0])
+            req.tokens.append(tok)
+            self.telemetry.token(req.request_id)
+            self._pos[lane] += 1
+            self._last[lane, 0] = tok
+            if len(req.tokens) >= req.max_new_tokens:
+                self._finish(lane, step)
+
+    def run(self, requests: List[ServeRequest]) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Serve ``requests`` to completion; returns ({request_id: generated
+        tokens}, run summary).  Writes the manifest at shutdown when
+        configured."""
+        t0 = time.monotonic()
+        for req in requests:
+            self.submit(req)
+        step = 0
+        while self.scheduler.has_work():
+            self._admit_and_prefill(step)
+            self._decode_once(step)
+            if self.ecfg.stats_every and step % self.ecfg.stats_every == 0:
+                self.telemetry.engine_stats(step, self.scheduler.n_active,
+                                            self.scheduler.n_waiting,
+                                            self.allocator.free_pages)
+            step += 1
+        wall = time.monotonic() - t0
+        summary = self.telemetry.run_summary(wall)
+        self.shutdown(wall)
+        return ({r.request_id: np.asarray(r.tokens, np.int32) for r in requests},
+                summary)
+
+    # ------------------------------------------------------------ shutdown
+    def manifest_meta(self) -> Dict[str, Any]:
+        e = self.ecfg
+        return {"mode": "continuous", "lanes": e.lanes, "page_size": e.page_size,
+                "num_pages": e.num_pages, "table_width": e.table_width}
+
+    def shutdown(self, wall_s: float, status: str = "completed") -> Optional[Dict]:
+        manifest = None
+        if self.ecfg.manifest_path:
+            manifest = self.telemetry.write_manifest(
+                self.ecfg.manifest_path, arch=self.arch,
+                engine=self.manifest_meta(), checkpoint=self.checkpoint,
+                wall_s=wall_s, status=status)
+        self.telemetry.close()
+        return manifest

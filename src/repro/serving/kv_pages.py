@@ -1,0 +1,89 @@
+"""Fixed-size KV page accounting for the continuous-batching engine.
+
+The physical pools live in the model's paged decode cache
+(``models/lm.py:init_paged_cache``): per attention layer, ``num_pages`` pages
+of ``page_size`` token slots, shared by all lanes.  This module owns the
+host-side bookkeeping: which pages belong to which request, and the index
+math that turns a page-table row into flat pool slots (the same formula the
+jitted gather/scatter in ``models/attention.py`` uses).
+
+Page 0 is reserved as a scratch page: free decode lanes point their whole
+table row at it so their (masked-out) writes never touch live pages.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+SCRATCH_PAGE = 0
+
+
+def needed_pages(total_tokens: int, page_size: int) -> int:
+    """Pages a request occupying ``total_tokens`` slots (prompt + generated)
+    needs; the engine allocates them all at admission (eager allocation)."""
+    return -(-total_tokens // page_size)
+
+
+def flat_slots(table_row: List[int], page_size: int, length: int) -> List[int]:
+    """Flat physical pool slot of logical positions 0..length-1 — the pure
+    reference for the jitted index math (used by tests)."""
+    return [table_row[j // page_size] * page_size + j % page_size
+            for j in range(length)]
+
+
+class PageAllocator:
+    """Free-list page allocator with leak / double-free checking.
+
+    ``alloc`` is all-or-nothing: a request that does not fit leaves the free
+    list untouched (the scheduler then blocks admission rather than holding
+    a partial allocation).  ``free`` rejects pages that are not currently
+    allocated to the given owner, so double-frees and cross-request frees
+    fail loudly instead of corrupting the pool.
+    """
+
+    def __init__(self, num_pages: int, reserved: int = 1):
+        if num_pages <= reserved:
+            raise ValueError(f"num_pages={num_pages} must exceed reserved={reserved}")
+        self.num_pages = num_pages
+        self.reserved = reserved
+        self._free: Deque[int] = deque(range(reserved, num_pages))
+        self._owner: Dict[int, object] = {}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - self.reserved
+
+    def alloc(self, n: int, owner: object) -> Optional[List[int]]:
+        """Allocate ``n`` pages for ``owner``; None (and no change) if the
+        pool cannot satisfy the request."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        for p in pages:
+            self._owner[p] = owner
+        return pages
+
+    def free(self, pages: List[int], owner: object) -> None:
+        for p in pages:
+            if self._owner.get(p) is not owner:
+                raise ValueError(
+                    f"page {p} not allocated to {owner!r} (double free or "
+                    f"cross-request free)")
+        for p in pages:
+            del self._owner[p]
+            self._free.append(p)
+
+    def check_consistent(self) -> None:
+        """Invariant: every page is exactly free or allocated, never both."""
+        free = set(self._free)
+        allocated = set(self._owner)
+        assert len(free) == len(self._free), "duplicate pages on the free list"
+        assert not (free & allocated), f"pages both free and allocated: {free & allocated}"
+        universe = set(range(self.reserved, self.num_pages))
+        assert free | allocated == universe, "leaked pages"

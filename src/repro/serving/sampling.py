@@ -1,0 +1,39 @@
+"""Sampling + feed building shared by every serve driver.
+
+``serve.py`` used to hardcode ``jnp.argmax`` greedy sampling inline in two
+places (the prefill tail and the decode step) and rebuild the zero ``frames``
+buffer for frontend models on every batch; both now live here.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def sample_greedy(logits) -> jnp.ndarray:
+    """Greedy next token from (B, S, V) logits: argmax over the vocabulary
+    at the last position, shaped (B, 1) int32 for the decode step."""
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+
+class FeedBuilder:
+    """Builds the prefill feed for a token batch, caching the zero frames
+    buffer per (batch, seq) shape instead of reallocating it per call."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._frames: Dict[Tuple[int, int], jnp.ndarray] = {}
+
+    def __call__(self, tokens) -> Dict[str, jnp.ndarray]:
+        tokens = jnp.asarray(tokens, jnp.int32)
+        feed = {"tokens": tokens}
+        if self.cfg.frontend:
+            key = tokens.shape[:2]
+            if key not in self._frames:
+                self._frames[key] = jnp.zeros(
+                    key + (self.cfg.d_model,), self.cfg.dtype)
+            feed["frames"] = self._frames[key]
+        return feed

@@ -1,0 +1,151 @@
+"""Continuous-batching scheduler: per-step admission into freed decode lanes.
+
+State machine per request:
+
+  WAITING --admit--> PREFILL --first token--> DECODE --last token--> FINISHED
+                (lane + pages assigned)                (lane + pages freed)
+
+Admission policy is strict FIFO with head-of-line page budgeting: each step,
+free lanes admit the *oldest* waiting requests whose full page need (prompt +
+max_new_tokens, eager allocation) fits the pool.  If the oldest waiting
+request does not fit, admission stops — younger, smaller requests do NOT skip
+ahead, so no request starves behind a stream of small ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from .kv_pages import PageAllocator, SCRATCH_PAGE, needed_pages
+
+WAITING, PREFILL, DECODE, FINISHED = "waiting", "prefill", "decode", "finished"
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One serving request: a prompt and a generation budget."""
+    request_id: str
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int
+    arrival_step: int = 0
+
+    # filled in by the scheduler/engine
+    state: str = WAITING
+    lane: int = -1
+    pages: List[int] = dataclasses.field(default_factory=list)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    submit_seq: int = -1
+    admitted_step: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+    def clone(self) -> "ServeRequest":
+        """Fresh copy without scheduler/engine state, so one workload can be
+        replayed through several engines."""
+        return ServeRequest(self.request_id, self.prompt,
+                            self.max_new_tokens, self.arrival_step)
+
+
+@dataclasses.dataclass
+class Admission:
+    request: ServeRequest
+    lane: int
+    pages: List[int]
+
+
+class ContinuousScheduler:
+    """Maps waiting requests onto ``lanes`` decode lanes and a shared page
+    pool.  Pure host-side logic — the engine owns the jitted compute."""
+
+    def __init__(self, lanes: int, allocator: PageAllocator, page_size: int,
+                 table_width: int):
+        self.lanes = lanes
+        self.allocator = allocator
+        self.page_size = page_size
+        self.table_width = table_width
+        self._free_lanes: Deque[int] = deque(range(lanes))
+        self._waiting: Deque[ServeRequest] = deque()
+        self._active: Dict[int, ServeRequest] = {}
+        self._seq = itertools.count()
+
+    # ------------------------------------------------------------- submit
+    def submit(self, req: ServeRequest) -> None:
+        npages = needed_pages(req.total_tokens, self.page_size)
+        if npages > self.table_width:
+            raise ValueError(
+                f"request {req.request_id}: {req.total_tokens} tokens need "
+                f"{npages} pages > table width {self.table_width}")
+        if npages > self.allocator.capacity:
+            raise ValueError(
+                f"request {req.request_id}: needs {npages} pages, pool has "
+                f"{self.allocator.capacity}")
+        req.state = WAITING
+        req.submit_seq = next(self._seq)
+        self._waiting.append(req)
+
+    # -------------------------------------------------------------- admit
+    def admit(self, step: int) -> List[Admission]:
+        """Admit the oldest waiting arrived requests into free lanes, while
+        pages last.  Head-of-line blocking keeps FIFO order."""
+        out: List[Admission] = []
+        while self._free_lanes and self._waiting:
+            head = self._waiting[0]
+            if head.arrival_step > step:
+                break
+            pages = self.allocator.alloc(
+                needed_pages(head.total_tokens, self.page_size), head)
+            if pages is None:
+                break
+            self._waiting.popleft()
+            lane = self._free_lanes.popleft()
+            head.state, head.lane, head.pages = PREFILL, lane, pages
+            head.admitted_step = step
+            self._active[lane] = head
+            out.append(Admission(head, lane, pages))
+        return out
+
+    # ------------------------------------------------------------ release
+    def release(self, lane: int) -> ServeRequest:
+        """Finish the request on ``lane``: free its pages, return the lane
+        to the free pool (it admits the oldest waiting prefill next step)."""
+        req = self._active.pop(lane)
+        self.allocator.free(req.pages, req)
+        req.state, req.lane, req.pages = FINISHED, -1, []
+        self._free_lanes.append(lane)
+        return req
+
+    # ------------------------------------------------------------ queries
+    def active(self) -> Dict[int, ServeRequest]:
+        return dict(self._active)
+
+    def request_on(self, lane: int) -> Optional[ServeRequest]:
+        return self._active.get(lane)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self._waiting)
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    def has_work(self) -> bool:
+        return bool(self._waiting or self._active)
+
+    def table_row(self, req: ServeRequest) -> np.ndarray:
+        """The lane's page-table row: allocated pages first, scratch-padded
+        to the fixed table width (unallocated slots are never gathered past
+        the request's own positions)."""
+        row = np.full((self.table_width,), SCRATCH_PAGE, np.int32)
+        row[:len(req.pages)] = np.asarray(req.pages, np.int32)
+        return row

@@ -1,0 +1,106 @@
+"""Run-artifact manifest contract.
+
+The manifest the engine writes at shutdown must validate against the
+checked-in ``serving.schema.MANIFEST_SCHEMA``; tampered manifests (missing
+fields, wrong enum values, extra keys, wrong schema version) must fail
+loudly; and a small real-engine run must leave a valid manifest on disk.
+"""
+import copy
+import json
+
+import jax
+import pytest
+
+from repro.serving import schema
+from repro.serving.telemetry import Telemetry
+
+
+def _mini_manifest(tmp_path, log_path=""):
+    tel = Telemetry(log_path=log_path)
+    tel.request_submitted("r0", 8, 3)
+    tel.request_admitted("r0", 0, 1, step=0)
+    tel.first_token("r0")
+    tel.token("r0")
+    tel.token("r0")
+    tel.request_finished("r0", 0, step=2)
+    tel.steps, tel.prefills = 2, 1
+    path = tmp_path / "manifest.json"
+    manifest = tel.write_manifest(
+        str(path), arch="qwen2-0.5b",
+        engine={"mode": "continuous", "lanes": 2, "page_size": 4,
+                "num_pages": 9, "table_width": 4},
+        checkpoint={"restored": False, "dir": "", "algorithm": ""},
+        wall_s=0.25)
+    tel.close()
+    return path, manifest
+
+
+def test_manifest_written_and_valid(tmp_path):
+    path, manifest = _mini_manifest(tmp_path)
+    on_disk = json.loads(path.read_text())
+    assert on_disk == manifest
+    schema.validate_manifest(on_disk)
+    assert on_disk["workload"] == {"requests": 1, "prompt_tokens": 8,
+                                   "generated_tokens": 3}
+    assert on_disk["throughput"]["tokens_per_s"] == pytest.approx(3 / 0.25)
+    assert on_disk["artifacts"]["log"] is None
+    assert on_disk["status"] == "completed"
+
+
+def test_manifest_records_log_artifact(tmp_path):
+    log = tmp_path / "serve_log.jsonl"
+    path, manifest = _mini_manifest(tmp_path, log_path=str(log))
+    assert manifest["artifacts"]["log"] == str(log)
+    assert log.exists()
+
+
+@pytest.mark.parametrize("mutate, msg", [
+    (lambda m: m.pop("latency_s"), "missing required key"),
+    (lambda m: m.__setitem__("status", "crashed"), "not in"),
+    (lambda m: m.__setitem__("schema_version", 999), "const"),
+    (lambda m: m.__setitem__("bonus", 1), "unexpected key"),
+    (lambda m: m["engine"].__setitem__("mode", "batched"), "not in"),
+    (lambda m: m["engine"].__setitem__("num_pages", 1), "minimum"),
+    (lambda m: m["throughput"].__setitem__("wall_s", "fast"), "is not"),
+    (lambda m: m["latency_s"]["ttft"].pop("p99"), "missing required key"),
+    (lambda m: m["checkpoint"].pop("algorithm"), "missing required key"),
+])
+def test_tampered_manifest_fails(tmp_path, mutate, msg):
+    _, manifest = _mini_manifest(tmp_path)
+    bad = copy.deepcopy(manifest)
+    mutate(bad)
+    with pytest.raises(schema.SchemaError, match=msg):
+        schema.validate_manifest(bad)
+
+
+def test_engine_run_writes_manifest_at_shutdown(tmp_path):
+    """End to end: a real ServeEngine run leaves a schema-valid manifest and
+    log file behind."""
+    from repro.configs import get_config
+    from repro.models.lm import LM
+    from repro.serving import EngineConfig, ServeEngine, ServeRequest
+    from repro.launch.serve import build_workload
+
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    log = tmp_path / "log.jsonl"
+    man = tmp_path / "manifest.json"
+    ecfg = EngineConfig(lanes=2, page_size=4, num_pages=9, max_len=12,
+                        stats_every=2, log_path=str(log),
+                        manifest_path=str(man))
+    engine = ServeEngine(model, params, ecfg, arch=cfg.name)
+    workload = build_workload(cfg, requests=3, prompt_len=6, gen=4)
+    results, summary = engine.run(workload)
+
+    assert set(results) == {r.request_id for r in workload}
+    assert all(len(v) == 4 for v in results.values())
+    manifest = json.loads(man.read_text())
+    schema.validate_manifest(manifest)
+    assert manifest["arch"] == cfg.name
+    assert manifest["engine"]["mode"] == "continuous"
+    assert manifest["workload"]["generated_tokens"] == 12
+    assert manifest["throughput"]["prefills"] == 3
+    assert manifest["artifacts"]["log"] == str(log)
+    for line in log.read_text().strip().splitlines():
+        schema.validate_log_line(json.loads(line))

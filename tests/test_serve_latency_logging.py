@@ -1,0 +1,147 @@
+"""Latency-accounting and structured-logging contracts.
+
+Percentiles must agree with the numpy reference (linear interpolation), the
+TTFT/TPOT/e2e math must be exact under a synthetic clock, and every emitted
+JSON log line must validate against the checked-in ``serving.schema``.
+"""
+import io
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving import schema
+from repro.serving.telemetry import (JsonLogger, RequestTimeline, Telemetry,
+                                     percentile, summarize)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# percentiles
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_matches_numpy_linear():
+    rng = np.random.default_rng(11)
+    for n in (1, 2, 3, 7, 50, 257):
+        xs = rng.exponential(0.02, size=n).tolist()
+        for q in (0.0, 25.0, 50.0, 90.0, 99.0, 100.0):
+            ours = percentile(xs, q)
+            ref = float(np.percentile(np.asarray(xs), q))
+            assert ours == pytest.approx(ref, rel=1e-12, abs=1e-15), (n, q)
+
+
+def test_percentile_empty_raises():
+    with pytest.raises(ValueError):
+        percentile([], 50.0)
+
+
+def test_summarize_fields():
+    s = summarize([1.0, 2.0, 3.0, 4.0])
+    assert s["p50"] == pytest.approx(2.5)
+    assert s["mean"] == pytest.approx(2.5)
+    assert s["max"] == 4.0
+    assert s["p99"] == pytest.approx(float(np.percentile([1, 2, 3, 4], 99)))
+
+
+# ---------------------------------------------------------------------------
+# timeline math under a synthetic clock
+# ---------------------------------------------------------------------------
+
+
+def test_ttft_tpot_e2e_exact_with_fake_clock():
+    clk = FakeClock()
+    tel = Telemetry(clock=clk)
+    tel.request_submitted("a", 8, 4)
+    clk.t = 0.5
+    tel.request_admitted("a", 0, 2, step=0)
+    clk.t = 0.7
+    tel.first_token("a")
+    for t in (0.8, 0.9, 1.3):
+        clk.t = t
+        tel.token("a")
+    tel.request_finished("a", 0, step=3)
+    tl = tel.timelines["a"]
+    assert tl.n_tokens == 4
+    assert tl.ttft_s == pytest.approx(0.7)
+    assert tl.tpot_s == pytest.approx((1.3 - 0.7) / 3)
+    assert tl.e2e_s == pytest.approx(1.3)
+    lat = tel.latency_summary()
+    assert lat["ttft"]["p50"] == pytest.approx(0.7)
+    assert lat["ttft"]["p99"] == pytest.approx(0.7)   # single request
+
+
+def test_single_token_request_has_zero_tpot():
+    tl = RequestTimeline("x", submitted_s=0.0, first_token_s=0.1,
+                         finished_s=0.1, n_tokens=1)
+    assert tl.tpot_s == 0.0
+
+
+def test_latency_summary_empty_is_zeros():
+    lat = Telemetry(clock=FakeClock()).latency_summary()
+    assert lat["tpot"]["p99"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# structured JSON logging
+# ---------------------------------------------------------------------------
+
+
+def _drive_run(tel):
+    tel.request_submitted("r0", 8, 2)
+    tel.request_admitted("r0", 0, 1, step=0)
+    tel.first_token("r0")
+    tel.token("r0")
+    tel.request_finished("r0", 0, step=1)
+    tel.engine_stats(step=1, active_lanes=0, waiting=0, free_pages=7)
+    tel.run_summary(wall_s=0.5)
+
+
+def test_every_emitted_line_validates_and_round_trips():
+    sink = io.StringIO()
+    tel = Telemetry(clock=FakeClock(), log_sink=sink)
+    _drive_run(tel)
+    raw = sink.getvalue().strip().splitlines()
+    assert len(raw) == len(tel.logger.lines) == 5
+    events = []
+    for line in raw:
+        obj = json.loads(line)          # one JSON object per line
+        schema.validate_log_line(obj)
+        events.append(obj["event"])
+    assert events == ["request_submitted", "request_admitted",
+                      "request_finished", "engine_stats", "run_summary"]
+
+
+def test_logger_rejects_schema_drift():
+    log = JsonLogger()
+    with pytest.raises(schema.SchemaError):
+        log.emit({"ts": 0.0, "event": "not_an_event"})
+    with pytest.raises(schema.SchemaError):            # missing required field
+        log.emit({"ts": 0.0, "event": "request_admitted", "request_id": "r",
+                  "lane": 0, "step": 0})
+    with pytest.raises(schema.SchemaError):            # extra field
+        log.emit({"ts": 0.0, "event": "engine_stats", "step": 1,
+                  "active_lanes": 0, "waiting": 0, "free_pages": 1,
+                  "bonus": True})
+    with pytest.raises(schema.SchemaError):            # wrong type
+        log.emit({"ts": "zero", "event": "run_summary", "requests": 1,
+                  "generated_tokens": 1, "wall_s": 0.1, "tokens_per_s": 10.0})
+    assert log.lines == []                             # nothing slipped through
+
+
+def test_log_path_writes_jsonl_file(tmp_path):
+    path = tmp_path / "serve_log.jsonl"
+    tel = Telemetry(clock=FakeClock(), log_path=str(path))
+    _drive_run(tel)
+    tel.close()
+    lines = [json.loads(l) for l in path.read_text().strip().splitlines()]
+    assert len(lines) == 5
+    for obj in lines:
+        schema.validate_log_line(obj)

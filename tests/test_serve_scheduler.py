@@ -1,0 +1,178 @@
+"""Continuous-batching scheduler + page-allocator contracts.
+
+Admission is strict FIFO into freed decode lanes (a freed lane admits the
+*oldest* waiting prefill next step; head-of-line page budgeting means no
+request starves behind smaller ones), and the page allocator never leaks or
+double-frees pages across arbitrary request arrival/finish sequences.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kv_pages import PageAllocator, SCRATCH_PAGE, flat_slots, needed_pages
+from repro.serving.scheduler import ContinuousScheduler, ServeRequest
+
+
+def _req(i, prompt_len=8, max_new=8, arrival=0):
+    return ServeRequest(request_id=f"r{i}", prompt=np.zeros(prompt_len, np.int32),
+                        max_new_tokens=max_new, arrival_step=arrival)
+
+
+def _sched(lanes=2, num_pages=64, page_size=4, table_width=8):
+    alloc = PageAllocator(num_pages, reserved=1)
+    return ContinuousScheduler(lanes, alloc, page_size, table_width), alloc
+
+
+# ---------------------------------------------------------------------------
+# admission order / lane reuse
+# ---------------------------------------------------------------------------
+
+
+def test_freed_lane_admits_oldest_waiting_next_step():
+    sched, _ = _sched(lanes=2)
+    reqs = [_req(i) for i in range(5)]
+    for r in reqs:
+        sched.submit(r)
+    adm = sched.admit(step=0)
+    assert [a.request.request_id for a in adm] == ["r0", "r1"]
+    assert sched.admit(step=1) == []          # lanes full
+    freed_lane = adm[1].lane
+    sched.release(freed_lane)
+    nxt = sched.admit(step=2)
+    assert [a.request.request_id for a in nxt] == ["r2"]   # oldest waiting
+    assert nxt[0].lane == freed_lane                        # reuses the lane
+
+
+def test_arrival_step_gates_admission():
+    sched, _ = _sched(lanes=4)
+    sched.submit(_req(0, arrival=3))
+    assert sched.admit(step=0) == []
+    assert sched.admit(step=2) == []
+    assert [a.request.request_id for a in sched.admit(step=3)] == ["r0"]
+
+
+def test_no_starvation_head_of_line_page_budget():
+    """A big request at the queue head blocks later small ones (FIFO), then
+    admits as soon as pages free — it is never skipped."""
+    # pool: 7 usable pages, page_size 4
+    sched, alloc = _sched(lanes=3, num_pages=8, page_size=4, table_width=8)
+    sched.submit(_req(0, prompt_len=8, max_new=8))    # 4 pages
+    sched.submit(_req(1, prompt_len=8, max_new=8))    # 4 pages -> won't fit
+    sched.submit(_req(2, prompt_len=4, max_new=4))    # 2 pages, younger
+    adm = sched.admit(step=0)
+    assert [a.request.request_id for a in adm] == ["r0"]
+    assert sched.n_waiting == 2                        # r2 did NOT skip r1
+    sched.release(adm[0].lane)
+    order = [a.request.request_id for a in sched.admit(step=1)]
+    assert order == ["r1", "r2"]
+
+
+def test_fifo_admission_under_random_finish_order():
+    rng = np.random.default_rng(0)
+    sched, alloc = _sched(lanes=3, num_pages=32, page_size=4, table_width=8)
+    n = 20
+    for i in range(n):
+        sched.submit(_req(i, prompt_len=4, max_new=int(rng.integers(1, 12))))
+    admitted = []
+    step = 0
+    while sched.has_work():
+        admitted += [a.request.request_id for a in sched.admit(step)]
+        active = list(sched.active())
+        if active:  # finish a random active lane
+            sched.release(active[int(rng.integers(len(active)))])
+        step += 1
+        assert step < 10_000
+    assert admitted == [f"r{i}" for i in range(n)]     # strict FIFO, none starved
+    alloc.check_consistent()
+    assert alloc.free_pages == alloc.capacity
+
+
+def test_submit_rejects_oversized_requests():
+    sched, _ = _sched(lanes=2, num_pages=8, page_size=4, table_width=4)
+    with pytest.raises(ValueError):
+        sched.submit(_req(0, prompt_len=16, max_new=16))  # > table width
+    sched2, _ = _sched(lanes=2, num_pages=4, page_size=4, table_width=16)
+    with pytest.raises(ValueError):
+        sched2.submit(_req(1, prompt_len=32, max_new=32))  # > pool capacity
+
+
+def test_table_row_scratch_padding_and_flat_slots():
+    sched, _ = _sched(lanes=1, page_size=4, table_width=8)
+    r = _req(0, prompt_len=6, max_new=3)               # 9 tokens -> 3 pages
+    sched.submit(r)
+    [adm] = sched.admit(0)
+    row = sched.table_row(r)
+    assert row.shape == (8,)
+    assert list(row[:3]) == adm.pages
+    assert all(p == SCRATCH_PAGE for p in row[3:])
+    assert SCRATCH_PAGE not in adm.pages
+    slots = flat_slots(list(row), 4, 9)
+    assert len(set(slots)) == 9                        # injective
+    assert slots[:4] == [adm.pages[0] * 4 + j for j in range(4)]
+
+
+# ---------------------------------------------------------------------------
+# allocator: no leaks, no double frees
+# ---------------------------------------------------------------------------
+
+
+def _run_alloc_trace(num_pages, trace):
+    """trace: sequence of ('alloc', n) / ('free', idx). Checks invariants
+    after every op; returns number of successful allocations."""
+    alloc = PageAllocator(num_pages, reserved=1)
+    live = {}
+    n_ok = 0
+    for op, arg in trace:
+        if op == "alloc":
+            owner = object()
+            pages = alloc.alloc(arg, owner)
+            if arg > alloc.capacity - sum(len(p) for p, _ in live.values()):
+                assert pages is None
+            if pages is not None:
+                assert len(pages) == arg
+                for existing, _ in live.values():
+                    assert not set(pages) & set(existing)
+                live[n_ok] = (pages, owner)
+                n_ok += 1
+        elif live:
+            key = sorted(live)[arg % len(live)]
+            pages, owner = live.pop(key)
+            alloc.free(pages, owner)
+            if pages:
+                with pytest.raises(ValueError):
+                    alloc.free(pages, owner)           # double free raises
+        alloc.check_consistent()
+    for pages, owner in live.values():
+        alloc.free(pages, owner)
+    alloc.check_consistent()
+    assert alloc.free_pages == alloc.capacity          # nothing leaked
+    return n_ok
+
+
+def test_allocator_never_leaks_random_sequences():
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        trace = [("alloc" if rng.random() < 0.6 else "free",
+                  int(rng.integers(0, 9))) for _ in range(60)]
+        _run_alloc_trace(int(rng.integers(4, 33)), trace)
+
+
+def test_allocator_property_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    ops = st.lists(st.tuples(st.sampled_from(["alloc", "free"]),
+                             st.integers(0, 8)), max_size=80)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(3, 40), ops)
+    def prop(num_pages, trace):
+        _run_alloc_trace(num_pages, trace)
+
+    prop()
+
+
+def test_needed_pages():
+    assert needed_pages(1, 4) == 1
+    assert needed_pages(4, 4) == 1
+    assert needed_pages(5, 4) == 2
+    assert needed_pages(64, 16) == 4

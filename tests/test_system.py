@@ -68,5 +68,39 @@ def test_train_cli_with_restart(tmp_path):
 def test_serve_cli():
     out = _run_cli(["repro.launch.serve", "--arch", "qwen2-0.5b", "--smoke",
                     "--requests", "4", "--batch", "2", "--prompt-len", "16",
-                    "--gen", "8"])
+                    "--gen", "8", "--lanes", "2"])
     assert "tok/s" in out
+    assert "continuous" in out
+
+
+def test_serve_cli_continuous_matches_fixed_from_ckpt(tmp_path):
+    """The continuous engine must be token-identical to the fixed-batch
+    driver when serving effective analog weights restored from a mixed
+    per-path plan checkpoint (attn stacks on RIDER, everything else on
+    E-RIDER)."""
+    import json
+
+    ck = str(tmp_path / "ckpt")
+    algo = "attn=rider,**=erider"
+    _run_cli(["repro.launch.train", "--arch", "qwen2-0.5b", "--smoke",
+              "--steps", "2", "--batch", "2", "--seq", "16",
+              "--ckpt-every", "2", "--ckpt-dir", ck, "--algorithm", algo])
+    common = ["repro.launch.serve", "--arch", "qwen2-0.5b", "--smoke",
+              "--requests", "5", "--prompt-len", "8", "--gen", "6",
+              "--gen-spread", "3", "--ckpt-dir", ck, "--algorithm", algo]
+    fix = str(tmp_path / "fixed.json")
+    con = str(tmp_path / "cont.json")
+    man = str(tmp_path / "manifest.json")
+    _run_cli(common + ["--engine", "fixed", "--batch", "5",
+                       "--dump-tokens", fix])
+    _run_cli(common + ["--engine", "continuous", "--lanes", "2",
+                       "--dump-tokens", con, "--manifest", man])
+    with open(fix) as f1, open(con) as f2:
+        fixed, cont = json.load(f1), json.load(f2)
+    assert fixed == cont and len(fixed) == 5
+    from repro.serving import schema
+    with open(man) as f:
+        manifest = json.load(f)
+    schema.validate_manifest(manifest)
+    assert manifest["checkpoint"] == {"restored": True, "dir": ck,
+                                      "algorithm": algo}
