@@ -1,0 +1,23 @@
+"""Static-analysis layer: graph contracts over lowered HLO + an AST linter.
+
+Two passes, both driven by ``tools/check_graphs.py``:
+
+* **Pass 1 — graph contracts** (`contracts.py` + `graph_contracts.py`):
+  every jitted entrypoint the repo's perf story depends on (the scanned
+  and fused ``train_step``, grouped ``begin_step``, serving
+  ``prefill_commit`` / ``serve_step_lanes``) is lowered and compiled on
+  CPU and its *optimized* HLO is asserted against a declarative
+  :class:`~repro.analysis.contracts.GraphContract` — zero restack
+  concatenates, donation aliasing actually applied, no host transfers,
+  a dtype allowlist (never f64), and ceilings on collective bytes and
+  trip-weighted HBM traffic.
+* **Pass 2 — AST lint** (`astlint.py`): repo-specific JAX pitfalls in
+  the source itself — host RNG reachable from traced code, PRNGKey
+  literal reuse, tracer host-syncs in hot paths, mutable defaults in
+  static config dataclasses, module-level jnp computation.
+"""
+from .contracts import ContractResult, GraphContract, check_hlo
+from .astlint import LintFinding, run_lint
+
+__all__ = ["GraphContract", "ContractResult", "check_hlo", "LintFinding",
+           "run_lint"]

@@ -1,0 +1,327 @@
+"""AST linter for repo-specific JAX pitfalls (pass 2 of check_graphs).
+
+Five rules, each targeting a bug class that type checkers and generic
+linters miss because the code is *valid Python* — it just does the wrong
+thing under ``jax.jit``:
+
+``host-rng``
+    ``np.random.*`` / stdlib ``random.*`` calls. Host RNG inside traced
+    code is baked in as a constant at trace time — every step reuses the
+    same "random" draw. Allowed under ``repro/data/`` (host-side corpus
+    synthesis runs eagerly by design).
+``prngkey-reuse``
+    The same ``PRNGKey(<literal>)`` seed constructed at two different
+    sites in one module: the streams are identical, so "independent"
+    noise is perfectly correlated.
+``tracer-sync``
+    Host syncs in hot paths: ``.item()`` anywhere; ``float()`` / ``int()``
+    / ``bool()`` applied directly to a ``jnp.*`` call's result; and
+    ``np.asarray`` / ``np.array`` inside the hot packages (``core``,
+    ``kernels``, ``models``) — each one blocks until the device finishes
+    and kills dispatch pipelining (PR 7 removed exactly this from the
+    serve loop).
+``mutable-default-config``
+    A mutable default (``[]`` / ``{}`` / ``set()`` or a
+    ``default_factory`` of list/dict/set) on a *static config* dataclass
+    — one that is frozen or named ``*Config``. Static configs are hashed
+    into jit caches; a mutable field either breaks hashing or, worse,
+    mutates without retriggering a trace.
+``module-level-jnp``
+    ``jnp.*`` calls at module scope: device computation (and backend
+    initialization) as an import side effect. Constants belong inside
+    functions or as ``np`` data.
+
+Escapes — both are deliberate-host-code markers, not suppressions of
+real bugs:
+
+* a function whose body contains its own ``import numpy`` is host-side
+  post-processing by construction; ``tracer-sync`` and ``host-rng`` are
+  skipped inside it (see ``core/zs.py::pulses_to_target``);
+* a line containing ``graphlint: allow`` suppresses any finding on it.
+
+``lint_source`` is pure text -> findings (unit-testable);
+``run_lint`` walks a source root.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+RULES = ("host-rng", "prngkey-reuse", "tracer-sync",
+         "mutable-default-config", "module-level-jnp")
+
+PRAGMA = "graphlint: allow"
+
+# packages where a hidden device->host sync is a perf bug, not a wart
+HOT_PACKAGES = ("repro/core/", "repro/kernels/", "repro/models/")
+# packages allowed to use host RNG (eager, host-side by design)
+HOST_RNG_OK = ("repro/data/",)
+
+_MUTABLE_FACTORIES = ("list", "dict", "set")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _attr_chain(node: ast.AST) -> Optional[str]:
+    """Dotted name of an attribute/name chain ('np.random.normal'), or
+    None for anything fancier (calls, subscripts)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _has_local_numpy_import(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Import):
+            if any(a.name in ("numpy", "numpy.random") for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            if (node.module or "").split(".")[0] == "numpy":
+                return True
+    return False
+
+
+class _Aliases:
+    """What do 'np', 'jnp', 'random'... mean in this module?"""
+
+    def __init__(self, tree: ast.Module):
+        self.numpy: set = set()
+        self.jnp: set = set()
+        self.std_random: set = set()
+        self.prngkey: set = set()      # names that ARE PRNGKey
+        self.jax_random: set = set()   # names that are jax.random
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    name = a.asname or a.name.split(".")[0]
+                    if a.name == "numpy":
+                        self.numpy.add(name)
+                    elif a.name == "jax.numpy":
+                        self.jnp.add(a.asname or "jnp")
+                    elif a.name == "random":
+                        self.std_random.add(name)
+                    elif a.name == "jax.random":
+                        self.jax_random.add(a.asname or "random")
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                for a in node.names:
+                    name = a.asname or a.name
+                    if mod == "jax" and a.name == "numpy":
+                        self.jnp.add(name)
+                    elif mod == "jax" and a.name == "random":
+                        self.jax_random.add(name)
+                    elif mod == "jax.random" and a.name == "PRNGKey":
+                        self.prngkey.add(name)
+                    elif mod == "numpy" and a.name == "random":
+                        self.numpy.add(name)  # "from numpy import random"
+
+
+def _is_prngkey_call(call: ast.Call, al: _Aliases) -> bool:
+    chain = _attr_chain(call.func)
+    if chain is None:
+        return False
+    if chain in al.prngkey or chain == "jax.random.PRNGKey":
+        return True
+    head, _, tail = chain.rpartition(".")
+    return tail == "PRNGKey" and (head in al.jax_random or head == "jax.random")
+
+
+def _dataclass_meta(cls: ast.ClassDef) -> Tuple[bool, bool]:
+    """(is_dataclass, is_frozen) from the decorator list."""
+    is_dc = frozen = False
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        chain = _attr_chain(target) or ""
+        if chain.split(".")[-1] != "dataclass":
+            continue
+        is_dc = True
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                    frozen = frozen or bool(kw.value.value)
+    return is_dc, frozen
+
+
+def _mutable_default(value: ast.AST) -> Optional[str]:
+    """Describe a mutable default expression, or None if it's fine."""
+    if isinstance(value, (ast.List, ast.Dict, ast.Set)):
+        return f"literal {type(value).__name__.lower()} default"
+    if isinstance(value, ast.Call):
+        chain = _attr_chain(value.func) or ""
+        if chain.split(".")[-1] in _MUTABLE_FACTORIES and not value.args:
+            return f"{chain}() default"
+        if chain.split(".")[-1] == "field":
+            for kw in value.keywords:
+                if kw.arg != "default_factory":
+                    continue
+                f = kw.value
+                fname = _attr_chain(f) or ""
+                if fname.split(".")[-1] in _MUTABLE_FACTORIES:
+                    return f"default_factory={fname}"
+                if isinstance(f, ast.Lambda) and _mutable_default(f.body):
+                    return "default_factory=lambda returning a mutable"
+    return None
+
+
+def lint_source(source: str, path: str) -> List[LintFinding]:
+    """Lint one module's source text. ``path`` is repo-relative and is
+    used both for reporting and for package-scoped rules."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [LintFinding(path, e.lineno or 0, "parse-error", str(e.msg))]
+
+    lines = source.splitlines()
+    al = _Aliases(tree)
+    norm = path.replace(os.sep, "/")
+    hot = any(p in norm for p in HOT_PACKAGES)
+    rng_ok = any(p in norm for p in HOST_RNG_OK)
+    findings: List[LintFinding] = []
+
+    def emit(node: ast.AST, rule: str, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if 0 < line <= len(lines) and PRAGMA in lines[line - 1]:
+            return
+        findings.append(LintFinding(path, line, rule, message))
+
+    # --- function bodies marked host-side by a local numpy import -------
+    host_fns: List[ast.AST] = [
+        n for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        and _has_local_numpy_import(n)]
+    host_nodes = set()
+    for fn in host_fns:
+        for n in ast.walk(fn):
+            host_nodes.add(id(n))
+
+    # --- per-node rules -------------------------------------------------
+    prng_seeds: Dict[object, int] = {}  # literal seed -> first lineno
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        in_host_fn = id(node) in host_nodes
+        chain = _attr_chain(node.func) or ""
+
+        # host-rng: np.random.* / random.*
+        if not in_host_fn and not rng_ok:
+            parts = chain.split(".")
+            if len(parts) >= 2 and parts[0] in al.numpy and parts[1] == "random":
+                emit(node, "host-rng",
+                     f"{chain}() is host RNG: traced code bakes the draw in "
+                     "as a constant (use jax.random with a threaded key)")
+            elif len(parts) == 2 and parts[0] in al.std_random:
+                emit(node, "host-rng",
+                     f"{chain}() is host RNG: traced code bakes the draw in "
+                     "as a constant (use jax.random with a threaded key)")
+
+        # prngkey-reuse: same literal seed at two sites
+        if _is_prngkey_call(node, al) and node.args \
+                and isinstance(node.args[0], ast.Constant):
+            seed = node.args[0].value
+            if seed in prng_seeds:
+                emit(node, "prngkey-reuse",
+                     f"PRNGKey({seed!r}) already constructed at line "
+                     f"{prng_seeds[seed]}: identical seeds give identical "
+                     "streams (split one key instead)")
+            else:
+                prng_seeds[seed] = node.lineno
+
+        # tracer-sync
+        if not in_host_fn:
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                emit(node, "tracer-sync",
+                     ".item() blocks on the device and returns a Python "
+                     "scalar: under jit it fails; outside it kills dispatch "
+                     "pipelining")
+            if hot and chain.split(".")[0] in al.numpy \
+                    and chain.split(".")[-1] in ("asarray", "array"):
+                emit(node, "tracer-sync",
+                     f"{chain}() in a hot package forces a device->host "
+                     "transfer (use jnp, or mark the function host-side "
+                     "with a local `import numpy`)")
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in ("float", "int", "bool") \
+                    and node.args and isinstance(node.args[0], ast.Call):
+                inner = _attr_chain(node.args[0].func) or ""
+                if inner.split(".")[0] in al.jnp:
+                    emit(node, "tracer-sync",
+                         f"{node.func.id}({inner}(...)) syncs on the device "
+                         "result (keep it an array, or compute with plain "
+                         "Python/np scalars)")
+
+    # --- mutable-default-config ----------------------------------------
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        is_dc, frozen = _dataclass_meta(node)
+        if not is_dc or not (frozen or node.name.endswith("Config")):
+            continue
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                why = _mutable_default(stmt.value)
+                if why:
+                    target = getattr(stmt.target, "id", "<field>")
+                    emit(stmt, "mutable-default-config",
+                         f"static config {node.name}.{target} has a mutable "
+                         f"default ({why}): unhashable as a jit-static, and "
+                         "mutation won't retrigger tracing (use a tuple / "
+                         "frozen value)")
+
+    # --- module-level-jnp -----------------------------------------------
+    def scan_toplevel(body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, (ast.If, ast.Try)):
+                for sub in ast.iter_child_nodes(stmt):
+                    if isinstance(sub, ast.stmt):
+                        scan_toplevel([sub])
+                continue
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call):
+                    chain = _attr_chain(node.func) or ""
+                    if chain.split(".")[0] in al.jnp:
+                        emit(node, "module-level-jnp",
+                             f"{chain}() at module scope runs device "
+                             "computation at import time (move it inside "
+                             "the function that needs it)")
+
+    scan_toplevel(tree.body)
+
+    return findings
+
+
+def run_lint(root: str) -> List[LintFinding]:
+    """Lint every ``*.py`` under ``root`` (deterministic order)."""
+    findings: List[LintFinding] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fname)
+            rel = os.path.relpath(full, os.path.dirname(root.rstrip("/")))
+            with open(full, encoding="utf-8") as f:
+                findings.extend(lint_source(f.read(), rel))
+    return findings

@@ -1,0 +1,267 @@
+"""Declarative structural contracts over optimized HLO text.
+
+A :class:`GraphContract` states what the *compiled* graph of one jitted
+entrypoint must look like — the invariants the repo's perf and numerics
+story depends on but which, until now, lived only in commit messages:
+
+* **no restacks** — the scanned tile engine consumes class-keyed storage
+  in place; a refactor that reintroduces per-step ``jnp.stack`` of the
+  class stacks shows up as rank-N ``concatenate`` ops (PR 5 had 17 of
+  them; PR 6 removed them all).
+* **donation applied** — tile state is donated and must actually alias
+  (``input_output_alias`` in the module header), with no full-stack
+  ``copy`` sneaking the round trip back in.
+* **no host transfers** — ``infeed``/``outfeed``/``send``/``recv`` and
+  host-callback ``custom-call``s stall every lane of the serving engine.
+* **dtype allowlist** — ``f64`` anywhere in the module is an accidental
+  promotion (the analog update path is f32 by contract; one f64 op
+  silently doubles HBM traffic and breaks TPU parity); each contract
+  lists exactly the dtypes it may use.
+* **cost ceilings** — trip-weighted HBM bytes and collective bytes per
+  step, priced by ``roofline/hlo_cost.py``, must stay under per-contract
+  ceilings.
+* **trip counts** — every ``while`` must carry a
+  ``known_trip_count`` annotation, or the cost model (and the ceilings
+  above) silently misprice the program.
+
+``check_hlo`` is pure text -> result: it never compiles anything, so the
+unit tests can feed it synthetic HLO. Building and compiling the real
+entrypoints lives in ``graph_contracts.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+from repro.roofline import hlo_cost
+from repro.roofline.hlo_common import (DTYPE_BYTES, HOST_TRANSFER_OPS,
+                                       SHAPE_RE, TRIP_RE, shape_bytes)
+
+# dtypes a contract may allow; f64/c64/c128 are never allowed (the repo
+# trains and serves in <= 32-bit; a 64-bit op is always an accident)
+FORBIDDEN_DTYPES = frozenset(("f64", "c64", "c128"))
+DEFAULT_ALLOWED_DTYPES = frozenset(
+    ("pred", "s4", "u4", "s8", "u8", "s16", "u16", "s32", "u32", "s64",
+     "u64", "f16", "bf16", "f32", "token", "opaque"))
+
+_ALIAS_MARK = "input_output_alias={"
+_ALIAS_ENTRY_RE = re.compile(r"\{[\d,\s]*\}:\s*\(")
+_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphContract:
+    """Structural invariants for one jitted entrypoint's optimized HLO."""
+
+    name: str
+    description: str = ""
+    # concatenate ops of result rank >= restack_rank count as restacks
+    # (class stacks are (C, n, *member): a restack of 2-D members is a
+    # rank-4 concatenate; legitimate grad stacking enters at rank 3)
+    restack_rank: int = 4
+    max_restacks: int = 0
+    # donation: the module header must alias >= min_aliased outputs, and
+    # no single `copy` op may move more than max_copy_bytes (a full-size
+    # copy of a donated class stack means aliasing silently failed)
+    require_donation: bool = True
+    min_aliased: int = 1
+    max_copy_bytes: int = 1 << 62
+    # host transfers: infeed/outfeed/send/recv always violate; custom-call
+    # targets violate unless allowlisted (CPU lowering of the repo's
+    # entrypoints uses none — a callback shows up immediately)
+    allowed_custom_calls: Tuple[str, ...] = ()
+    allowed_dtypes: Tuple[str, ...] = tuple(sorted(DEFAULT_ALLOWED_DTYPES))
+    # per-step ceilings priced by the trip-count-aware cost model
+    max_collective_bytes: float = 0.0
+    max_hbm_bytes: float = float("inf")
+    require_trip_counts: bool = True
+
+    def __post_init__(self):
+        bad = set(self.allowed_dtypes) & FORBIDDEN_DTYPES
+        if bad:
+            raise ValueError(
+                f"contract {self.name!r} allowlists forbidden dtypes {sorted(bad)}")
+        unknown = set(self.allowed_dtypes) - set(DTYPE_BYTES)
+        if unknown:
+            raise ValueError(
+                f"contract {self.name!r} allowlists unknown dtypes {sorted(unknown)}")
+
+    def limits_json(self) -> Dict:
+        """The loosenable knobs, for baseline drift detection."""
+        return {
+            "restack_rank": self.restack_rank,
+            "max_restacks": self.max_restacks,
+            "require_donation": self.require_donation,
+            "min_aliased": self.min_aliased,
+            "max_copy_bytes": self.max_copy_bytes,
+            "allowed_custom_calls": sorted(self.allowed_custom_calls),
+            "allowed_dtypes": sorted(self.allowed_dtypes),
+            "max_collective_bytes": self.max_collective_bytes,
+            "max_hbm_bytes": self.max_hbm_bytes,
+            "require_trip_counts": self.require_trip_counts,
+        }
+
+
+@dataclasses.dataclass
+class ContractResult:
+    name: str
+    violations: List[Dict[str, str]] = dataclasses.field(default_factory=list)
+    stats: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> Dict:
+        return {"name": self.name, "ok": self.ok,
+                "violations": list(self.violations), "stats": dict(self.stats)}
+
+
+def _result_rank(type_str: str) -> int:
+    """Rank of an instruction result (max over tuple elements)."""
+    best = 0
+    for m in SHAPE_RE.finditer(type_str):
+        dims = m.group(2)
+        best = max(best, dims.count(",") + 1 if dims else 0)
+    return best
+
+
+def _aliased_outputs(hlo: str) -> int:
+    start = hlo.find(_ALIAS_MARK)
+    if start < 0:
+        return 0
+    # the map nests braces ({output-index}: (arg, {arg-index}, kind)) —
+    # scan to the matching close instead of regex-balancing
+    i = start + len(_ALIAS_MARK)
+    depth = 1
+    while i < len(hlo) and depth:
+        if hlo[i] == "{":
+            depth += 1
+        elif hlo[i] == "}":
+            depth -= 1
+        i += 1
+    return len(_ALIAS_ENTRY_RE.findall(hlo[start + len(_ALIAS_MARK):i]))
+
+
+def check_hlo(contract: GraphContract, hlo: str) -> ContractResult:
+    """Assert ``contract`` against one optimized-HLO module's text."""
+    res = ContractResult(contract.name)
+    comps = hlo_cost.parse_module(hlo)
+
+    restacks = []
+    copies_max = 0
+    host_ops = []
+    dtypes_seen = set()
+    whiles = 0
+    whiles_unannotated = []
+    for comp in comps.values():
+        for instr in comp.instrs:
+            dtypes_seen.update(
+                m.group(1) for m in SHAPE_RE.finditer(instr.type_str)
+                if m.group(1) in DTYPE_BYTES)
+            if instr.op == "concatenate" \
+                    and _result_rank(instr.type_str) >= contract.restack_rank:
+                restacks.append(f"{comp.name}/{instr.name}")
+            elif instr.op == "copy":
+                copies_max = max(copies_max, shape_bytes(instr.type_str))
+            elif instr.op in HOST_TRANSFER_OPS:
+                host_ops.append(f"{comp.name}/{instr.name} [{instr.op}]")
+            elif instr.op == "custom-call":
+                tm = _TARGET_RE.search(instr.rest)
+                target = tm.group(1) if tm else "<unknown>"
+                if target not in contract.allowed_custom_calls:
+                    host_ops.append(
+                        f"{comp.name}/{instr.name} [custom-call {target}]")
+            elif instr.op == "while":
+                whiles += 1
+                if not TRIP_RE.search(instr.rest):
+                    whiles_unannotated.append(f"{comp.name}/{instr.name}")
+
+    cost = hlo_cost.analyze_hlo(hlo)
+    aliased = _aliased_outputs(hlo)
+
+    def violate(rule: str, detail: str) -> None:
+        res.violations.append({"rule": rule, "detail": detail})
+
+    if len(restacks) > contract.max_restacks:
+        violate("restack",
+                f"{len(restacks)} concatenate op(s) of rank >= "
+                f"{contract.restack_rank} (contract allows "
+                f"{contract.max_restacks}): {', '.join(restacks[:5])}")
+    if contract.require_donation and aliased < contract.min_aliased:
+        violate("donation",
+                f"input-output aliasing covers {aliased} output(s); contract "
+                f"requires >= {contract.min_aliased} (donated buffers are "
+                "not round-tripping in place)")
+    if copies_max > contract.max_copy_bytes:
+        violate("copy",
+                f"largest copy op moves {copies_max} bytes "
+                f"(> {contract.max_copy_bytes}): a donated stack is being "
+                "materialized instead of aliased")
+    if host_ops:
+        violate("host-transfer",
+                f"{len(host_ops)} host-transfer op(s): "
+                f"{', '.join(host_ops[:5])}")
+    bad_dtypes = dtypes_seen - set(contract.allowed_dtypes)
+    if bad_dtypes:
+        violate("dtype",
+                f"dtype(s) {sorted(bad_dtypes)} outside the contract "
+                f"allowlist {sorted(set(contract.allowed_dtypes) - set(('token', 'opaque')))}")
+    if cost.coll_bytes > contract.max_collective_bytes:
+        violate("collective-bytes",
+                f"{cost.coll_bytes:.0f} collective bytes/step "
+                f"(> {contract.max_collective_bytes:.0f})")
+    if cost.bytes > contract.max_hbm_bytes:
+        violate("hbm-bytes",
+                f"{cost.bytes:.0f} trip-weighted HBM bytes/step "
+                f"(> {contract.max_hbm_bytes:.0f})")
+    if contract.require_trip_counts and whiles_unannotated:
+        violate("trip-count",
+                f"{len(whiles_unannotated)} while loop(s) without "
+                f"known_trip_count: {', '.join(whiles_unannotated[:5])}")
+
+    res.stats = {
+        "restacks": len(restacks),
+        "aliased_outputs": aliased,
+        "max_copy_bytes": copies_max,
+        "host_transfer_ops": len(host_ops),
+        "dtypes": sorted(dtypes_seen),
+        "whiles": whiles,
+        "whiles_unannotated": len(whiles_unannotated),
+        "hbm_bytes": cost.bytes,
+        "collective_bytes": cost.coll_bytes,
+        "flops": cost.flops,
+    }
+    return res
+
+
+def loosened(current: GraphContract, baseline_limits: Dict) -> List[str]:
+    """Which knobs of ``current`` are looser than the baseline recorded?
+    Returns human-readable descriptions (empty = nothing loosened)."""
+    cur = current.limits_json()
+    out = []
+
+    def check_max(key):
+        if key in baseline_limits and cur[key] > baseline_limits[key]:
+            out.append(f"{key} raised {baseline_limits[key]} -> {cur[key]}")
+
+    for key in ("max_restacks", "max_copy_bytes", "max_collective_bytes",
+                "max_hbm_bytes"):
+        check_max(key)
+    if "restack_rank" in baseline_limits \
+            and cur["restack_rank"] > baseline_limits["restack_rank"]:
+        out.append(f"restack_rank raised {baseline_limits['restack_rank']} "
+                   f"-> {cur['restack_rank']} (fewer concats count)")
+    if "min_aliased" in baseline_limits \
+            and cur["min_aliased"] < baseline_limits["min_aliased"]:
+        out.append(f"min_aliased lowered {baseline_limits['min_aliased']} "
+                   f"-> {cur['min_aliased']}")
+    for key in ("require_donation", "require_trip_counts"):
+        if baseline_limits.get(key) and not cur[key]:
+            out.append(f"{key} disabled")
+    for key in ("allowed_dtypes", "allowed_custom_calls"):
+        extra = set(cur[key]) - set(baseline_limits.get(key, cur[key]))
+        if extra:
+            out.append(f"{key} grew by {sorted(extra)}")
+    return out

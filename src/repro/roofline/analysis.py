@@ -21,37 +21,14 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import re
 from typing import Dict, Optional
+
+from .hlo_common import COLL_RE as _COLL_RE
+from .hlo_common import shape_bytes as _shape_bytes
 
 PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
 HBM_BW = 819e9           # B/s / chip
 LINK_BW = 50e9           # B/s / ICI link
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
-}
-
-_COLL_RE = re.compile(
-    r"(\w+[\d.]*)\s*=\s*(?:\(([^)]*)\)|(\S+))\s+"
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(",
-)
-_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|pred|c64|c128)\[([\d,]*)\]")
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for m in _SHAPE_RE.finditer(type_str):
-        dt, dims = m.group(1), m.group(2)
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, int]:

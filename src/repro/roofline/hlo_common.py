@@ -1,0 +1,77 @@
+"""Shared HLO-text vocabulary: dtype widths, shape/collective regexes.
+
+One home for the tables that ``hlo_cost.py`` (the trip-count-aware cost
+model) and ``analysis.py`` (the roofline report) used to duplicate — the
+two copies had drifted (the roofline copy was missing the f8 fnuz
+variants). ``repro.analysis`` (the graph-contract checker) builds on the
+same vocabulary, so a dtype XLA learns tomorrow is added in exactly one
+place.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+# bytes per element of every dtype token XLA prints in shape strings
+DTYPE_BYTES: Dict[str, int] = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+# dtypes that never carry real payload (control/placeholder types)
+ZERO_WIDTH_DTYPES = frozenset(("token", "opaque"))
+
+# `dtype[dims]` anywhere in a type string; tuple types repeat the pattern
+# (possibly interleaved with `/*index=N*/` comments, which this skips).
+SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# one collective instruction per line of optimized HLO text: name, result
+# type (tuple or flat), opcode, tolerating the async `-start` suffix
+COLL_RE = re.compile(
+    r"(\w+[\d.]*)\s*=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(" + "|".join(COLLECTIVES) + r")"
+    r"(?:-start)?\(",
+)
+
+# static-loop annotation on `while` ops in optimized HLO
+TRIP_RE = re.compile(r"known_trip_count[^\d]*(\d+)")
+
+# ops classed as host transfers by the graph-contract checker: data leaves
+# or enters the device outside the normal parameter/result path
+HOST_TRANSFER_OPS = frozenset(
+    ("infeed", "outfeed", "send", "send-done", "recv", "recv-done"))
+
+
+def shape_bytes_elems(type_str: str) -> Tuple[int, int]:
+    """(total bytes, total elements) over every shape in ``type_str``.
+    Unknown dtype tokens are skipped (matches the cost model's behavior)."""
+    total_b = 0
+    total_e = 0
+    for m in SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_b += n * DTYPE_BYTES[dt]
+        total_e += n
+    return total_b, total_e
+
+
+def shape_bytes(type_str: str) -> int:
+    return shape_bytes_elems(type_str)[0]
+
+
+def shape_dtypes(type_str: str):
+    """Every known dtype token appearing in ``type_str`` (tuple-aware)."""
+    return [m.group(1) for m in SHAPE_RE.finditer(type_str)
+            if m.group(1) in DTYPE_BYTES]

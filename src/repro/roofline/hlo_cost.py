@@ -26,16 +26,16 @@ from __future__ import annotations
 
 import math
 import re
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
-    "token": 0, "opaque": 0,
-}
+from .hlo_common import (COLLECTIVES, DTYPE_BYTES, TRIP_RE,
+                         shape_bytes_elems)
+
+# legacy aliases (pre-hlo_common callers import these from here)
+_DTYPE_BYTES = DTYPE_BYTES
+_TRIP_RE = TRIP_RE
 
 _SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
 # TYPE may be a tuple spanning `/*index=N*/` comments; lazy-match up to the
@@ -47,35 +47,18 @@ _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*->")
 _CALLS_RE = re.compile(r"(?:calls=|to_apply=|body=)%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
 _DIMS_RE = {
     k: re.compile(k + r"=\{([\d,]*)\}")
     for k in ("lhs_contracting_dims", "rhs_contracting_dims",
               "lhs_batch_dims", "rhs_batch_dims")
 }
 
-COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
 # ops with no real data movement
 _FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
          "after-all", "partition-id", "replica-id", "iota", "custom-call"}
 
 
-def _type_bytes_elems(type_str: str) -> Tuple[int, int]:
-    total_b = 0
-    total_e = 0
-    for m in _SHAPE_RE.finditer(type_str):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total_b += n * _DTYPE_BYTES[dt]
-        total_e += n
-    return total_b, total_e
+_type_bytes_elems = shape_bytes_elems
 
 
 def _dims_of(type_str: str) -> List[int]:
@@ -255,8 +238,19 @@ def analyze_hlo(hlo: str) -> Cost:
         total = Cost()
         for instr in comp.instrs:
             if instr.op == "while":
-                m = _TRIP_RE.search(instr.rest)
-                trips = int(m.group(1)) if m else 1
+                m = TRIP_RE.search(instr.rest)
+                if m:
+                    trips = int(m.group(1))
+                else:
+                    # dynamic-condition loops carry no known_trip_count;
+                    # price the body once rather than silently dropping it,
+                    # and say so — a mispriced loop poisons the roofline
+                    trips = 1
+                    warnings.warn(
+                        f"while loop '{instr.name}' (in computation "
+                        f"'{comp.name}') has no known_trip_count annotation; "
+                        "pricing its body with trip count 1",
+                        RuntimeWarning, stacklevel=2)
                 body = _CALLS_RE.search(instr.rest)
                 cond = _COND_RE.search(instr.rest)
                 if body:

@@ -1,0 +1,178 @@
+"""AST linter: every rule fires on a synthetic repro, every escape works,
+and the real source tree is clean."""
+import os
+
+from repro.analysis import run_lint
+from repro.analysis.astlint import lint_source
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+HOT = "src/repro/core/fake.py"
+COLD = "src/repro/launch/fake.py"
+
+
+def _rules(src, path=HOT):
+    return [f.rule for f in lint_source(src, path)]
+
+
+# ---------------------------------------------------------------------------
+# host-rng
+# ---------------------------------------------------------------------------
+
+
+def test_np_random_flagged():
+    src = "import numpy as np\ndef f(): return np.random.normal()\n"
+    assert _rules(src) == ["host-rng"]
+
+
+def test_stdlib_random_flagged():
+    src = "import random\ndef f(): return random.gauss(0, 1)\n"
+    assert _rules(src) == ["host-rng"]
+
+
+def test_host_rng_allowed_in_data_package():
+    src = "import numpy as np\ndef f(): return np.random.normal()\n"
+    assert _rules(src, "src/repro/data/synthetic.py") == []
+
+
+def test_jax_random_not_flagged():
+    src = ("import jax\n"
+           "def f(key): return jax.random.normal(key, (3,))\n")
+    assert _rules(src) == []
+
+
+# ---------------------------------------------------------------------------
+# prngkey-reuse
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_literal_seed_flagged():
+    src = ("import jax\n"
+           "def f(): return jax.random.PRNGKey(0)\n"
+           "def g(): return jax.random.PRNGKey(0)\n")
+    fs = lint_source(src, HOT)
+    assert [f.rule for f in fs] == ["prngkey-reuse"]
+    assert fs[0].line == 3
+
+
+def test_distinct_seeds_and_nonliteral_ok():
+    src = ("import jax\n"
+           "def f(): return jax.random.PRNGKey(0)\n"
+           "def g(seed): return jax.random.PRNGKey(seed)\n"
+           "def h(): return jax.random.PRNGKey(1)\n")
+    assert _rules(src) == []
+
+
+def test_from_import_prngkey_detected():
+    src = ("from jax.random import PRNGKey\n"
+           "a = PRNGKey(7)\nb = PRNGKey(7)\n")
+    assert _rules(src) == ["prngkey-reuse"]
+
+
+# ---------------------------------------------------------------------------
+# tracer-sync
+# ---------------------------------------------------------------------------
+
+
+def test_item_flagged_everywhere():
+    src = "def f(x): return x.item()\n"
+    assert _rules(src, COLD) == ["tracer-sync"]
+
+
+def test_np_asarray_flagged_only_in_hot_packages():
+    src = "import numpy as np\ndef f(x): return np.asarray(x)\n"
+    assert _rules(src, HOT) == ["tracer-sync"]
+    assert _rules(src, COLD) == []
+
+
+def test_float_of_jnp_call_flagged():
+    src = "import jax.numpy as jnp\ndef f(x): return float(jnp.sum(x))\n"
+    assert _rules(src) == ["tracer-sync"]
+    # float() of plain python is fine
+    assert _rules("def f(x): return float(len(x))\n") == []
+
+
+def test_local_numpy_import_marks_host_function():
+    src = ("def f(x):\n"
+           "    import numpy as np\n"
+           "    return float(np.asarray(x).sum().item())\n")
+    assert _rules(src) == []
+
+
+def test_pragma_suppresses():
+    src = "def f(x): return x.item()  # graphlint: allow\n"
+    assert _rules(src) == []
+
+
+# ---------------------------------------------------------------------------
+# mutable-default-config
+# ---------------------------------------------------------------------------
+
+
+def test_mutable_default_in_frozen_dataclass_flagged():
+    src = ("import dataclasses\n"
+           "@dataclasses.dataclass(frozen=True)\n"
+           "class Thing:\n"
+           "    xs: tuple = ()\n"
+           "    ys: list = dataclasses.field(default_factory=list)\n")
+    assert _rules(src) == ["mutable-default-config"]
+
+
+def test_config_suffix_counts_as_static():
+    src = ("from dataclasses import dataclass, field\n"
+           "@dataclass\n"
+           "class RunConfig:\n"
+           "    opts: dict = field(default_factory=dict)\n")
+    assert _rules(src) == ["mutable-default-config"]
+
+
+def test_plain_dataclass_may_use_default_factory():
+    src = ("from dataclasses import dataclass, field\n"
+           "@dataclass\n"
+           "class Accum:\n"
+           "    vals: list = field(default_factory=list)\n")
+    assert _rules(src) == []
+
+
+def test_tuple_factory_is_fine():
+    src = ("import dataclasses\n"
+           "@dataclasses.dataclass(frozen=True)\n"
+           "class FooConfig:\n"
+           "    xs: tuple = dataclasses.field(default_factory=tuple)\n")
+    assert _rules(src) == []
+
+
+# ---------------------------------------------------------------------------
+# module-level-jnp
+# ---------------------------------------------------------------------------
+
+
+def test_module_level_jnp_call_flagged():
+    src = "import jax.numpy as jnp\nTABLE = jnp.arange(16)\n"
+    assert _rules(src) == ["module-level-jnp"]
+
+
+def test_jnp_attribute_access_at_module_level_ok():
+    # dtype aliases etc. are attribute reads, not device computation
+    src = "import jax.numpy as jnp\nDTYPE = jnp.float32\n"
+    assert _rules(src) == []
+
+
+def test_jnp_inside_function_ok():
+    src = "import jax.numpy as jnp\ndef f(): return jnp.arange(16)\n"
+    assert _rules(src) == []
+
+
+# ---------------------------------------------------------------------------
+# whole tree
+# ---------------------------------------------------------------------------
+
+
+def test_repo_source_is_clean():
+    findings = run_lint(SRC)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_syntax_error_reported_not_raised():
+    fs = lint_source("def f(:\n", HOT)
+    assert len(fs) == 1 and fs[0].rule == "parse-error"

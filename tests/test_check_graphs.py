@@ -1,0 +1,121 @@
+"""check_graphs CLI: report schema, baseline diff semantics, lint pass."""
+import copy
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_cli():
+    spec = importlib.util.spec_from_file_location(
+        "check_graphs", os.path.join(REPO, "tools", "check_graphs.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+cg = _load_cli()
+
+
+def _fake_report():
+    from repro.analysis import graph_contracts as gc
+
+    contracts = []
+    for name in sorted(gc.CONTRACTS):
+        contracts.append({
+            "name": name, "ok": True, "violations": [],
+            "stats": {"restacks": 0, "aliased_outputs": 2,
+                      "max_copy_bytes": 0, "host_transfer_ops": 0,
+                      "dtypes": ["f32"], "whiles": 0,
+                      "whiles_unannotated": 0, "hbm_bytes": 1.0,
+                      "collective_bytes": 0.0, "flops": 0.0},
+            "limits": gc.CONTRACTS[name].limits_json(),
+        })
+    return {"version": cg.SCHEMA_VERSION, "ok": True, "mutant": None,
+            "contracts": contracts, "lint": []}
+
+
+def test_report_schema_validates():
+    from repro.serving.schema import SchemaError, validate
+
+    report = _fake_report()
+    validate(report, cg.REPORT_SCHEMA)
+    bad = copy.deepcopy(report)
+    del bad["contracts"][0]["stats"]
+    with pytest.raises(SchemaError):
+        validate(bad, cg.REPORT_SCHEMA)
+
+
+def test_baseline_roundtrip_passes():
+    report = _fake_report()
+    baseline = cg.baseline_from_report(report)
+    assert cg.diff_baseline(report, baseline) == []
+
+
+def test_new_violation_fails_check():
+    report = _fake_report()
+    baseline = cg.baseline_from_report(report)
+    report["contracts"][0]["violations"].append(
+        {"rule": "restack", "detail": "planted"})
+    fails = cg.diff_baseline(report, baseline)
+    assert any("restack" in f for f in fails)
+
+
+def test_missing_and_extra_contracts_fail_check():
+    report = _fake_report()
+    baseline = cg.baseline_from_report(report)
+    # baseline knows a contract the registry lost -> coverage shrank
+    baseline["contracts"]["ghost"] = {"limits": {}, "stats": {}}
+    fails = cg.diff_baseline(report, baseline)
+    assert any("no longer registered" in f for f in fails)
+    # registry has a contract the baseline has never seen -> stale baseline
+    baseline2 = cg.baseline_from_report(report)
+    del baseline2["contracts"][report["contracts"][0]["name"]]
+    fails2 = cg.diff_baseline(report, baseline2)
+    assert any("not in baseline" in f for f in fails2)
+
+
+def test_loosened_limit_fails_check():
+    report = _fake_report()
+    baseline = cg.baseline_from_report(report)
+    name = report["contracts"][0]["name"]
+    # baseline remembers a tighter ceiling than the registry now declares
+    baseline["contracts"][name]["limits"]["max_hbm_bytes"] = 1.0
+    fails = cg.diff_baseline(report, baseline)
+    assert any("loosened" in f and name in f for f in fails)
+
+
+def test_new_lint_finding_fails_check():
+    report = _fake_report()
+    baseline = cg.baseline_from_report(report)
+    report["lint"].append({"path": "src/repro/core/x.py", "line": 3,
+                           "rule": "tracer-sync", "message": "bad"})
+    fails = cg.diff_baseline(report, baseline)
+    assert any("tracer-sync" in f for f in fails)
+
+
+def test_checked_in_baseline_matches_registry():
+    """GRAPH_BASELINE.json must track the CONTRACTS registry (the CI gate
+    re-lowers everything; here we just pin names and limit drift)."""
+    from repro.analysis import graph_contracts as gc
+    from repro.analysis.contracts import loosened
+
+    with open(os.path.join(REPO, "GRAPH_BASELINE.json")) as f:
+        baseline = json.load(f)
+    assert set(baseline["contracts"]) == set(gc.CONTRACTS)
+    for name, entry in baseline["contracts"].items():
+        assert loosened(gc.CONTRACTS[name], entry["limits"]) == []
+
+
+def test_cli_lint_only_smoke():
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_graphs.py"),
+         "--lint-only"],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "lint: clean" in out.stdout

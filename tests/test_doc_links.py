@@ -1,0 +1,45 @@
+"""check_doc_links: GitHub slugging and anchor validation."""
+import importlib.util
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+spec = importlib.util.spec_from_file_location(
+    "check_doc_links", os.path.join(REPO, "tools", "check_doc_links.py"))
+cdl = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(cdl)
+
+
+def test_github_slug_rules():
+    assert cdl.github_slug("Graph contracts") == "graph-contracts"
+    assert cdl.github_slug("The grouped train step (`core/trainer.py`)") \
+        == "the-grouped-train-step-coretrainerpy"
+    assert cdl.github_slug("Policy- and spec-aware keys") \
+        == "policy--and-spec-aware-keys"
+    assert cdl.github_slug("[linked](docs/x.md) header") == "linked-header"
+
+
+def test_anchors_dedupe_and_skip_fences(tmp_path):
+    md = tmp_path / "doc.md"
+    md.write_text("# Top\n## Same\n## Same\n```\n# not a header\n```\n")
+    assert cdl.anchors_of(str(md)) == {"top", "same", "same-1"}
+
+
+def test_broken_anchor_reported(tmp_path):
+    target = tmp_path / "target.md"
+    target.write_text("# Real Section\n")
+    src = tmp_path / "src.md"
+    src.write_text("[ok](target.md#real-section) [bad](target.md#gone) "
+                   "[self](#missing)\n")
+    broken = cdl.check_file(str(src))
+    assert [(t, w) for t, _, w in broken] == [
+        ("target.md#gone", "has no section anchor #gone"),
+        ("#missing", "has no section anchor #missing"),
+    ]
+
+
+def test_repo_docs_pass():
+    bad = []
+    for md in cdl.doc_files():
+        bad.extend(cdl.check_file(md))
+    assert bad == []

@@ -1,0 +1,214 @@
+"""Graph contracts: per-rule units on synthetic HLO, then the real
+entrypoints — clean on main, failing under every planted mutation."""
+import warnings
+
+import pytest
+
+from repro.analysis import GraphContract, check_hlo
+from repro.analysis.contracts import _aliased_outputs, loosened
+
+ALIAS = ("input_output_alias={ {0}: (0, {}, may-alias), "
+         "{1}: (1, {}, may-alias) }")
+
+
+def _mod(body: str, header_extra: str = "") -> str:
+    head = "HloModule test" + (", " + header_extra if header_extra else "")
+    return (f"{head}\n\nENTRY %main (p0: f32[4]) -> f32[4] {{\n"
+            f"  %p0 = f32[4]{{0}} parameter(0)\n{body}}}\n")
+
+
+def _check(body: str, header_extra: str = ALIAS, **kw):
+    kw.setdefault("require_trip_counts", True)
+    return check_hlo(GraphContract(name="t", **kw), _mod(body, header_extra))
+
+
+def _rules(res):
+    return sorted({v["rule"] for v in res.violations})
+
+
+# ---------------------------------------------------------------------------
+# per-rule units (pure text -> result; nothing is compiled)
+# ---------------------------------------------------------------------------
+
+
+def test_clean_module_passes():
+    res = _check("  ROOT %a = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p0)\n")
+    assert res.ok, res.violations
+
+
+def test_rank4_concatenate_is_a_restack():
+    body = ("  %c = f32[2,3,8,8]{3,2,1,0} concatenate(f32[1,3,8,8]{3,2,1,0} "
+            "%p0, f32[1,3,8,8]{3,2,1,0} %p0), dimensions={0}\n"
+            "  ROOT %a = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p0)\n")
+    assert _rules(_check(body)) == ["restack"]
+    # legitimate low-rank concats (grad stacking) don't count
+    body3 = body.replace("[2,3,8,8]{3,2,1,0}", "[2,3,8]{2,1,0}") \
+                .replace("[1,3,8,8]{3,2,1,0}", "[1,3,8]{2,1,0}")
+    assert _check(body3).ok
+    # raising max_restacks admits it (and shows up as a loosenable knob)
+    assert _check(body, max_restacks=1).ok
+
+
+def test_missing_alias_header_violates_donation():
+    body = "  ROOT %a = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p0)\n"
+    res = _check(body, header_extra="")
+    assert _rules(res) == ["donation"]
+    assert _check(body, header_extra="", require_donation=False).ok
+
+
+def test_aliased_outputs_counts_entries():
+    hlo = _mod("  ROOT %a = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p0)\n",
+               ALIAS + ", entry_computation_layout={(f32[4])->f32[4]}")
+    assert _aliased_outputs(hlo) == 2
+    assert _aliased_outputs("HloModule bare") == 0
+
+
+def test_oversized_copy_violates():
+    body = ("  %c = f32[1024]{0} copy(f32[1024]{0} %big)\n"
+            "  ROOT %a = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p0)\n")
+    res = _check(body, max_copy_bytes=1024)
+    assert "copy" in _rules(res)
+    assert res.stats["max_copy_bytes"] == 4096
+    assert _check(body, max_copy_bytes=4096).ok
+
+
+def test_host_transfer_ops_violate():
+    body = ("  %o = token[] outfeed(f32[4]{0} %p0, token[] %tok)\n"
+            "  ROOT %a = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p0)\n")
+    assert "host-transfer" in _rules(_check(body))
+
+
+def test_custom_call_needs_allowlist():
+    body = ('  %cc = f32[4]{0} custom-call(f32[4]{0} %p0), '
+            'custom_call_target="xla_python_cpu_callback"\n'
+            "  ROOT %a = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p0)\n")
+    assert "host-transfer" in _rules(_check(body))
+    assert _check(
+        body, allowed_custom_calls=("xla_python_cpu_callback",)).ok
+
+
+def test_f64_violates_dtype_allowlist():
+    body = ("  %d = f64[4]{0} convert(f32[4]{0} %p0)\n"
+            "  ROOT %a = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p0)\n")
+    res = _check(body)
+    assert "dtype" in _rules(res)
+    assert "f64" in res.stats["dtypes"]
+
+
+def test_f64_cannot_be_allowlisted():
+    with pytest.raises(ValueError, match="forbidden"):
+        GraphContract(name="bad", allowed_dtypes=("f32", "f64"))
+    with pytest.raises(ValueError, match="unknown"):
+        GraphContract(name="bad", allowed_dtypes=("f32", "float99"))
+
+
+def test_collective_bytes_ceiling():
+    body = ("  %ar = f32[256]{0} all-reduce(f32[256]{0} %p0), to_apply=%sum\n"
+            "  ROOT %a = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p0)\n")
+    res = _check(body)  # default ceiling is 0
+    assert "collective-bytes" in _rules(res)
+    assert _check(body, max_collective_bytes=1024.0).ok
+
+
+def test_hbm_ceiling():
+    body = "  ROOT %a = f32[4]{0} add(f32[4]{0} %p0, f32[4]{0} %p0)\n"
+    res = _check(body, max_hbm_bytes=10.0)
+    assert _rules(res) == ["hbm-bytes"]
+
+
+def test_unannotated_while_violates_trip_counts():
+    hlo = """\
+HloModule w, input_output_alias={ {0}: (0, {}, may-alias) }
+
+%body (bs: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %bs = (s32[], f32[4]) parameter(0)
+  ROOT %bt = (s32[], f32[4]) copy((s32[], f32[4]) %bs)
+}
+
+%cond (cs: (s32[], f32[4])) -> pred[] {
+  %cs = (s32[], f32[4]) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+ENTRY %main (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  ROOT %w = (s32[], f32[4]) while((s32[], f32[4]) %p), condition=%cond, body=%body
+}
+"""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        res = check_hlo(GraphContract(name="t"), hlo)
+    assert "trip-count" in _rules(res)
+    assert res.stats["whiles_unannotated"] == 1
+
+
+# ---------------------------------------------------------------------------
+# loosening detection (the baseline-drift gate)
+# ---------------------------------------------------------------------------
+
+
+def test_loosened_flags_raised_ceilings_and_grown_allowlists():
+    base = GraphContract(name="t", max_hbm_bytes=1e6, max_copy_bytes=1024,
+                         allowed_dtypes=("f32", "pred"),
+                         min_aliased=4).limits_json()
+    same = GraphContract(name="t", max_hbm_bytes=1e6, max_copy_bytes=1024,
+                         allowed_dtypes=("f32", "pred"), min_aliased=4)
+    assert loosened(same, base) == []
+
+    looser = GraphContract(
+        name="t", max_hbm_bytes=2e6, max_copy_bytes=4096,
+        allowed_dtypes=("f32", "pred", "bf16"), min_aliased=1,
+        require_trip_counts=False, max_restacks=3,
+        allowed_custom_calls=("foo",))
+    msgs = "\n".join(loosened(looser, base))
+    for frag in ("max_hbm_bytes", "max_copy_bytes", "allowed_dtypes",
+                 "min_aliased", "require_trip_counts", "max_restacks",
+                 "allowed_custom_calls"):
+        assert frag in msgs, f"{frag} not flagged:\n{msgs}"
+    # tightening is never flagged
+    tighter = GraphContract(name="t", max_hbm_bytes=5e5, max_copy_bytes=512,
+                            allowed_dtypes=("f32",), min_aliased=8)
+    assert loosened(tighter, base) == []
+
+
+# ---------------------------------------------------------------------------
+# the real entrypoints (lower + compile on CPU)
+# ---------------------------------------------------------------------------
+
+gc = pytest.importorskip("repro.analysis.graph_contracts")
+
+
+def test_registry_covers_all_entrypoints():
+    assert set(gc.CONTRACTS) == set(gc.ENTRYPOINTS)
+    assert len(gc.CONTRACTS) >= 5
+
+
+@pytest.mark.parametrize("name", sorted(
+    ["train_step_fused", "begin_step", "serve_step_lanes"]))
+def test_entrypoint_clean_on_main(name):
+    res = gc.run_contract(name)
+    assert res.ok, res.violations
+
+
+@pytest.mark.parametrize("mutant, rule", [
+    ("restack", "restack"),
+    ("host_transfer", "host-transfer"),
+    ("f64", "dtype"),
+    ("no_donate", "donation"),
+])
+def test_train_step_mutations_caught(mutant, rule):
+    res = gc.run_contract("train_step_fused", mutant=mutant)
+    assert not res.ok
+    assert rule in _rules(res), (mutant, res.violations)
+
+
+def test_serve_step_host_transfer_caught():
+    res = gc.run_contract("serve_step_lanes", mutant="host_transfer")
+    assert not res.ok
+    assert "host-transfer" in _rules(res)
+
+
+def test_serve_step_restack_caught():
+    res = gc.run_contract("serve_step_lanes", mutant="restack")
+    assert not res.ok
+    assert "restack" in _rules(res)

@@ -1,0 +1,180 @@
+"""HLO parser/cost-model edge cases + the shared-vocabulary dedupe."""
+import warnings
+
+import pytest
+
+from repro.roofline import analysis, hlo_common, hlo_cost
+
+# ---------------------------------------------------------------------------
+# shared vocabulary (the dedupe satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_tables_are_shared_not_copied():
+    # hlo_cost re-exports the common tables under its legacy names
+    assert hlo_cost._DTYPE_BYTES is hlo_common.DTYPE_BYTES
+    assert hlo_cost._TRIP_RE is hlo_common.TRIP_RE
+    # roofline analysis binds the same objects (its old private copy had
+    # drifted: no f8 fnuz variants)
+    assert analysis._COLL_RE is hlo_common.COLL_RE
+    assert analysis._shape_bytes is hlo_common.shape_bytes
+
+
+def test_f8_fnuz_variants_present():
+    for dt in ("f8e5m2fnuz", "f8e4m3fnuz", "f8e4m3b11fnuz"):
+        assert hlo_common.DTYPE_BYTES[dt] == 1
+    assert hlo_common.shape_bytes("f8e4m3fnuz[16,4]{1,0}") == 64
+
+
+def test_zero_width_dtypes():
+    assert hlo_common.shape_bytes("token[]") == 0
+    b, e = hlo_common.shape_bytes_elems("(f32[4]{0}, token[])")
+    assert (b, e) == (16, 5)
+
+
+# ---------------------------------------------------------------------------
+# tuple-shaped results with /*index=N*/ comments
+# ---------------------------------------------------------------------------
+
+TUPLE_HLO = """\
+HloModule tuple_result
+
+%fused_add (fp: f32[8]) -> (f32[8], f32[8]) {
+  %fp = f32[8]{0} parameter(0)
+  %x = f32[8]{0} add(f32[8]{0} %fp, f32[8]{0} %fp)
+  ROOT %ft = (f32[8]{0} /*index=0*/, f32[8]{0} /*index=1*/) tuple(f32[8]{0} %x, f32[8]{0} %x)
+}
+
+ENTRY %main (p0: f32[8]) -> (f32[8], f32[8]) {
+  %p0 = f32[8]{0} parameter(0)
+  ROOT %f = (f32[8]{0} /*index=0*/, f32[8]{0} /*index=1*/) fusion(f32[8]{0} %p0), kind=kLoop, calls=%fused_add
+}
+"""
+
+
+def test_tuple_result_parses_with_index_comments():
+    comps = hlo_cost.parse_module(TUPLE_HLO)
+    assert set(comps) == {"fused_add", "main"}
+    f = comps["main"].instrs[-1]
+    assert f.op == "fusion" and f.name == "f"
+    assert hlo_common.shape_bytes(f.type_str) == 64
+    assert hlo_common.shape_dtypes(f.type_str) == ["f32", "f32"]
+
+
+def test_tuple_fusion_cost():
+    cost = hlo_cost.analyze_hlo(TUPLE_HLO)
+    # fusion boundary: 64 B result tuple + 32 B operand; internals free
+    assert cost.bytes == 96
+    assert cost.flops == 0
+
+
+# ---------------------------------------------------------------------------
+# async -start / -done collective pairs
+# ---------------------------------------------------------------------------
+
+ASYNC_COLL_HLO = """\
+HloModule async_coll
+
+ENTRY %main (p0: f32[1024]) -> f32[2048] {
+  %p0 = f32[1024]{0} parameter(0)
+  %ag-start = (f32[1024]{0}, f32[2048]{0}) all-gather-start(f32[1024]{0} %p0), replica_groups={{0,1}}, dimensions={0}
+  ROOT %ag-done = f32[2048]{0} all-gather-done((f32[1024]{0}, f32[2048]{0}) %ag-start)
+}
+"""
+
+
+def test_async_collective_counted_once():
+    cost = hlo_cost.analyze_hlo(ASYNC_COLL_HLO)
+    # the -start op carries the collective; -done must not double count
+    assert set(cost.coll) == {"all-gather"}
+    assert cost.coll_bytes == 4 * (1024 + 2048)
+
+
+def test_collective_bytes_tolerates_start_suffix_and_tuples():
+    out = analysis.collective_bytes(ASYNC_COLL_HLO)
+    assert out == {"all-gather": 4 * (1024 + 2048)}
+
+
+def test_collective_bytes_flat_op():
+    hlo = "  %ar.1 = f32[256]{0} all-reduce(f32[256]{0} %x), to_apply=%sum\n"
+    assert analysis.collective_bytes(hlo) == {"all-reduce": 1024}
+
+
+# ---------------------------------------------------------------------------
+# nested fusion/call computations
+# ---------------------------------------------------------------------------
+
+NESTED_HLO = """\
+HloModule nested
+
+%inner_dot (a: f32[8,16], b: f32[16,4]) -> f32[8,4] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[16,4]{1,0} parameter(1)
+  ROOT %d = f32[8,4]{1,0} dot(f32[8,16]{1,0} %a, f32[16,4]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%outer (x: f32[8,16], y: f32[16,4]) -> f32[8,4] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %y = f32[16,4]{1,0} parameter(1)
+  ROOT %c = f32[8,4]{1,0} call(f32[8,16]{1,0} %x, f32[16,4]{1,0} %y), to_apply=%inner_dot
+}
+
+ENTRY %main (p: f32[8,16], q: f32[16,4]) -> f32[8,4] {
+  %p = f32[8,16]{1,0} parameter(0)
+  %q = f32[16,4]{1,0} parameter(1)
+  ROOT %f = f32[8,4]{1,0} fusion(f32[8,16]{1,0} %p, f32[16,4]{1,0} %q), kind=kOutput, calls=%outer
+}
+"""
+
+
+def test_nested_fusion_dot_flops_counted():
+    cost = hlo_cost.analyze_hlo(NESTED_HLO)
+    assert cost.flops == 2 * 8 * 16 * 4
+
+
+# ---------------------------------------------------------------------------
+# while loops: known_trip_count vs unannotated
+# ---------------------------------------------------------------------------
+
+def _while_hlo(annot: str) -> str:
+    return f"""\
+HloModule w
+
+%body (bs: (s32[], f32[64])) -> (s32[], f32[64]) {{
+  %bs = (s32[], f32[64]) parameter(0)
+  %g = f32[64]{{0}} get-tuple-element((s32[], f32[64]) %bs), index=1
+  %h = f32[64]{{0}} add(f32[64]{{0}} %g, f32[64]{{0}} %g)
+  %i = s32[] get-tuple-element((s32[], f32[64]) %bs), index=0
+  ROOT %bt = (s32[], f32[64]) tuple(s32[] %i, f32[64]{{0}} %h)
+}}
+
+%cond (cs: (s32[], f32[64])) -> pred[] {{
+  %cs = (s32[], f32[64]) parameter(0)
+  %ci = s32[] get-tuple-element((s32[], f32[64]) %cs), index=0
+  %lim = s32[] constant(10)
+  ROOT %lt = pred[] compare(s32[] %ci, s32[] %lim), direction=LT
+}}
+
+ENTRY %main (p: (s32[], f32[64])) -> (s32[], f32[64]) {{
+  %p = (s32[], f32[64]) parameter(0)
+  ROOT %w = (s32[], f32[64]) while((s32[], f32[64]) %p), condition=%cond, body=%body{annot}
+}}
+"""
+
+
+def test_known_trip_count_scales_body():
+    annotated = hlo_cost.analyze_hlo(
+        _while_hlo(', backend_config={"known_trip_count":{"n":"10"}}'))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        bare = hlo_cost.analyze_hlo(_while_hlo(""))
+    # while op itself moves its carried tuple once in both cases; the
+    # body+cond cost scales by the trip count
+    carried = 4 + 256
+    assert annotated.bytes - carried == 10 * (bare.bytes - carried)
+
+
+def test_unannotated_while_warns_and_prices_once():
+    with pytest.warns(RuntimeWarning, match="known_trip_count"):
+        cost = hlo_cost.analyze_hlo(_while_hlo(""))
+    assert cost.bytes > 0

@@ -1,10 +1,13 @@
 #!/usr/bin/env python
 """Check internal markdown links in README.md, docs/ and benchmarks/.
 
-Validates every relative [text](target) link — external (http/mailto) and
-pure-anchor links are skipped; targets resolve relative to the file that
-contains them; a trailing #anchor is allowed (only the file part is
-checked). Exits nonzero listing every broken link.
+Validates every relative [text](target) link — external (http/mailto)
+links are skipped; targets resolve relative to the file that contains
+them. ``#anchor`` fragments (including pure-anchor links within a file)
+are resolved against the target's actual section headers using GitHub's
+slug rules, so a link into a renamed ``docs/architecture.md`` section
+fails instead of silently pointing at nothing. Exits nonzero listing
+every broken link.
 
 Run from anywhere:  python tools/check_doc_links.py
 """
@@ -17,6 +20,37 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOC_GLOBS = ["README.md", "docs", "benchmarks/README.md"]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADER_RE = re.compile(r"^#{1,6}\s+(.+?)\s*$", re.M)
+_FENCE_RE = re.compile(r"```.*?```", re.S)
+
+
+def github_slug(header: str) -> str:
+    """GitHub's anchor slug for one header line."""
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", header)  # [text](url)
+    text = text.replace("`", "").strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+_anchor_cache: dict = {}
+
+
+def anchors_of(md_path: str) -> set:
+    """Every valid #anchor of a markdown file (duplicate headers get
+    GitHub's -1/-2 suffixes)."""
+    if md_path in _anchor_cache:
+        return _anchor_cache[md_path]
+    with open(md_path) as f:
+        text = _FENCE_RE.sub("", f.read())
+    out: set = set()
+    seen: dict = {}
+    for m in _HEADER_RE.finditer(text):
+        slug = github_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    _anchor_cache[md_path] = out
+    return out
 
 
 def doc_files():
@@ -36,16 +70,20 @@ def check_file(md_path):
     with open(md_path) as f:
         text = f.read()
     # drop fenced code blocks: JSON/code samples are not links
-    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    text = _FENCE_RE.sub("", text)
     for target in LINK_RE.findall(text):
-        if target.startswith(("http://", "https://", "mailto:", "#")):
+        if target.startswith(("http://", "https://", "mailto:")):
             continue
-        rel = target.split("#", 1)[0]
-        if not rel:
-            continue
-        resolved = os.path.normpath(os.path.join(os.path.dirname(md_path), rel))
+        rel, _, anchor = target.partition("#")
+        resolved = (md_path if not rel else os.path.normpath(
+            os.path.join(os.path.dirname(md_path), rel)))
         if not os.path.exists(resolved):
-            broken.append((target, resolved))
+            broken.append((target, resolved, "does not exist"))
+            continue
+        if anchor and resolved.endswith(".md"):
+            if anchor not in anchors_of(resolved):
+                broken.append(
+                    (target, resolved, f"has no section anchor #{anchor}"))
     return broken
 
 
@@ -53,10 +91,10 @@ def main() -> int:
     n_files, n_links_bad = 0, 0
     for md in doc_files():
         n_files += 1
-        for target, resolved in check_file(md):
+        for target, resolved, why in check_file(md):
             n_links_bad += 1
             print(f"BROKEN {os.path.relpath(md, ROOT)}: ({target}) "
-                  f"-> {os.path.relpath(resolved, ROOT)} does not exist")
+                  f"-> {os.path.relpath(resolved, ROOT)} {why}")
     if n_links_bad:
         print(f"{n_links_bad} broken link(s) across {n_files} file(s)")
         return 1
