@@ -243,8 +243,9 @@ def build_prefill_commit(mutant: Optional[str] = None) -> str:
 def build_serve_step_lanes(mutant: Optional[str] = None) -> str:
     model, params, ecfg, paged, _ = _serve_setup()
 
-    def step_fn(params, last, cache, table, pos):
-        toks, cache = model.serve_step_lanes(params, last, cache, table, pos)
+    def step_fn(params, last, cache, table, pos, live):
+        toks, cache = model.serve_step_lanes(params, last, cache, table, pos,
+                                             live)
         if mutant == "host_transfer":
             jax.debug.print("contract-mutation {t}", t=toks.sum())
         if mutant == "f64":
@@ -256,7 +257,41 @@ def build_serve_step_lanes(mutant: Optional[str] = None) -> str:
     last = jnp.zeros((ecfg.lanes, 1), jnp.int32)
     table = jnp.zeros((ecfg.lanes, ecfg.table_width), jnp.int32)
     pos = jnp.zeros((ecfg.lanes,), jnp.int32)
-    return _compile(step_fn, (params, last, paged, table, pos), (2,), mutant)
+    live = jnp.ones((ecfg.lanes,), bool)
+    return _compile(step_fn, (params, last, paged, table, pos, live), (2,),
+                    mutant)
+
+
+def build_prefill_commit_batch(mutant: Optional[str] = None) -> str:
+    """The PR-9 bucketed multi-lane prefill: 2 rows padded to a 16-token
+    length bucket, masked in-graph, K/V scattered straight into the rows'
+    pages, last valid position sampled in-graph."""
+    model, params, ecfg, paged, _ = _serve_setup()
+    from repro.serving.sampling import sample_greedy
+
+    def prefill_batch(params, tokens, paged, tables, lanes, starts, lengths,
+                      fresh):
+        if mutant == "f64":
+            paged = _mutate_f64(paged)
+        if mutant == "restack":
+            paged = _mutate_restack(paged)
+        logits, out = model.prefill_commit_batch(
+            params, tokens, paged, tables, lanes, starts, lengths, fresh)
+        tok = sample_greedy(logits)
+        if mutant == "host_transfer":
+            jax.debug.print("contract-mutation {t}", t=tok.sum())
+        return tok, out
+
+    B, Cb = 2, 16
+    tokens = jnp.zeros((B, Cb), jnp.int32)
+    tables = jnp.zeros((B, ecfg.table_width), jnp.int32)
+    lanes = jnp.arange(B, dtype=jnp.int32)
+    starts = jnp.zeros((B,), jnp.int32)
+    lengths = jnp.full((B,), Cb, jnp.int32)
+    fresh = jnp.ones((B,), bool)
+    return _compile(prefill_batch,
+                    (params, tokens, paged, tables, lanes, starts, lengths,
+                     fresh), (2,), mutant)
 
 
 ENTRYPOINTS: Dict[str, Callable[[Optional[str]], str]] = {
@@ -265,6 +300,7 @@ ENTRYPOINTS: Dict[str, Callable[[Optional[str]], str]] = {
     "begin_step": build_begin_step,
     "prefill_commit": build_prefill_commit,
     "serve_step_lanes": build_serve_step_lanes,
+    "prefill_commit_batch": build_prefill_commit_batch,
 }
 
 
@@ -324,6 +360,17 @@ CONTRACTS: Dict[str, GraphContract] = {
         min_aliased=2,           # measured 2 (donated page pools)
         max_copy_bytes=196608,   # measured 131072 (embed-table copy)
         max_hbm_bytes=1.4e7,     # measured 7.0M
+    ),
+    "prefill_commit_batch": GraphContract(
+        name="prefill_commit_batch",
+        description="bucketed multi-lane masked prefill: donated page "
+                    "pools, in-graph length masking and first-token "
+                    "sampling, no dense-cache round trip",
+        allowed_dtypes=_SERVE_DTYPES,
+        max_restacks=2,          # RoPE rotate-half concats
+        min_aliased=2,           # donated page pools
+        max_copy_bytes=98304,    # measured 67584 (one KV pool)
+        max_hbm_bytes=2.2e7,     # measured 15.2M
     ),
     "serve_step_lanes": GraphContract(
         name="serve_step_lanes",

@@ -44,21 +44,32 @@ from repro.serving import (EngineConfig, FeedBuilder, ServeEngine,
 
 
 def build_workload(cfg, requests: int, prompt_len: int, gen: int, seed: int = 3,
-                   gen_spread: int = 0, arrival_every: int = 0) -> List[ServeRequest]:
+                   gen_spread: int = 0, arrival_every: int = 0,
+                   prefix_len: int = 0) -> List[ServeRequest]:
     """Deterministic request trace: both engines consume the same prompts.
 
     ``gen_spread`` alternates short/long generations around ``--gen``
     (mixed-length trace); ``arrival_every`` staggers arrivals one request
     every N engine steps (mixed-arrival trace — the fixed driver ignores
-    arrivals, an oracle assumption in its favor)."""
+    arrivals, an oracle assumption in its favor); ``prefix_len`` gives every
+    prompt a common leading run of that many tokens (shared-prefix trace —
+    a system prompt — which ``--prefix-share`` turns into CoW page hits)."""
     data = BigramLM(vocab=cfg.vocab, seed=seed)
+    prefix = None
+    if prefix_len:
+        if prefix_len >= prompt_len:
+            raise ValueError(f"prefix_len={prefix_len} must be < prompt_len={prompt_len}")
+        prefix = data.batch(10_000, 1, prefix_len)["tokens"][0].astype(np.int32)
     out = []
     for i in range(requests):
-        prompt = data.batch(i, 1, prompt_len)["tokens"][0].astype(np.int32)
+        tail_len = prompt_len - (prefix_len if prefix is not None else 0)
+        prompt = data.batch(i, 1, tail_len)["tokens"][0].astype(np.int32)
+        if prefix is not None:
+            prompt = np.concatenate([prefix, prompt])
         n = gen if not gen_spread else max(1, gen + (gen_spread if i % 2 else -gen_spread))
         out.append(ServeRequest(request_id=f"req{i:04d}", prompt=prompt,
                                 max_new_tokens=n,
-                                arrival_step=i * arrival_every))
+                                arrival_step=i * arrival_every, seed=i))
     return out
 
 
@@ -124,6 +135,19 @@ def main(argv=None) -> None:
                     help="alternate gen +/- spread (mixed-length trace)")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="stagger arrivals every N engine steps")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="common prompt prefix length (shared-prefix trace)")
+    ap.add_argument("--prefill-chunk", type=int, default=-1,
+                    help="prefill chunk tokens (-1 = per-arch default, 0 = off)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="max prefill tokens per engine step (0 = unlimited; "
+                         "chunked mode only — caps decode jitter)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="copy-on-write prompt-prefix KV page sharing")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter for temperature sampling (0 = off)")
     ap.add_argument("--lanes", type=int, default=0,
                     help="decode lanes (0 = per-arch serving default)")
     ap.add_argument("--page-size", type=int, default=0,
@@ -151,7 +175,8 @@ def main(argv=None) -> None:
 
     workload = build_workload(cfg, args.requests, args.prompt_len, args.gen,
                               gen_spread=args.gen_spread,
-                              arrival_every=args.arrival_every)
+                              arrival_every=args.arrival_every,
+                              prefix_len=args.prefix_len)
     max_gen = max(r.max_new_tokens for r in workload)
     engine_mode = args.engine
     if engine_mode == "continuous" and cfg.is_encdec:
@@ -166,10 +191,17 @@ def main(argv=None) -> None:
         max_len = args.prompt_len + max_gen
         table_width = -(-max_len // page_size)
         num_pages = args.num_pages or (lanes * table_width + 1)
+        chunk = (defaults.prefill_chunk if args.prefill_chunk < 0
+                 else args.prefill_chunk)
+        share = args.prefix_share or defaults.prefix_share
         ecfg = EngineConfig(lanes=lanes, page_size=page_size,
                             num_pages=num_pages, max_len=max_len,
                             log_path=args.log_json,
-                            manifest_path=args.manifest)
+                            manifest_path=args.manifest,
+                            prefill_chunk=chunk,
+                            prefill_budget=args.prefill_budget,
+                            prefix_share=share,
+                            temperature=args.temperature, top_k=args.top_k)
         engine = ServeEngine(model, params, ecfg, arch=cfg.name,
                              checkpoint={"restored": bool(args.ckpt_dir),
                                          "dir": args.ckpt_dir,

@@ -460,6 +460,91 @@ def attn_decode_paged(p, x, cfg: ModelConfig, *, kind: str, pos, table, cache):
                      vp=vflat.reshape(cache["vp"].shape))
 
 
+def _chunk_attention(q, k, v, *, q_pos, k_pos, window: int = 0,
+                     chunk: int = 1024):
+    """Online-softmax attention with *dynamic* per-row masks, mirroring
+    ``_flash_fwd_impl`` update-for-update (same m/l/acc recurrence, same
+    einsums, same dtype handling).  Masked keys contribute exactly zero
+    (``exp(NEG_INF - m) == 0``), so over any key set whose valid subset
+    matches the dense path's, a single-chunk lowering reproduces the dense
+    flash forward — the identity the batched/chunked serve prefill rides.
+
+    q: (B,Sq,H,Dk); k/v: (B,Sk,KV,D*); q_pos: (B,Sq) absolute positions of
+    the queries; k_pos: (B,Sk) stored positions (-1 = empty/stale slot).
+    """
+    B, Sq, H, Dk = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    chunk = min(chunk, Sk)
+    qg = (q * jnp.asarray(Dk ** -0.5, q.dtype)).reshape(B, Sq, KV, G, Dk)
+    kc, vc, n_chunks = _flash_chunks(k, v, chunk)
+    pad = (-Sk) % chunk
+    kpp = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1) if pad else k_pos
+    kpc = kpp.reshape(B, n_chunks, chunk).swapaxes(0, 1)          # (n,B,chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, kp = xs
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb,
+                       preferred_element_type=jnp.float32)
+        mask = (kp[:, None, :] >= 0) & (kp[:, None, :] <= q_pos[:, :, None])
+        if window and window > 0:
+            mask = mask & (kp[:, None, :] > q_pos[:, :, None] - window)
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KV, G, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kpc))
+    l_safe = jnp.maximum(l, 1e-37)
+    return (acc / l_safe[..., None]).reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def attn_chunk_paged(p, x, cfg: ModelConfig, *, kind: str, positions, lengths,
+                     table, cache):
+    """Batched bucketed/chunked prefill straight into the paged KV pools.
+
+    x: (B,Cb,d) right-padded chunk batch; positions: (B,Cb) absolute
+    positions (``start + j``); lengths: (B,) valid run per row; table: (B,T)
+    page-table rows.  Scatters the chunk's K/V into each row's pages first
+    (padded slots land on the scratch page), then attends the chunk queries
+    over the row's *gathered* logical view — earlier chunks and shared
+    prefix pages included — under a ``k_pos <= q_pos`` mask, so one jitted
+    signature serves plain bucketed prefill, chunk continuation, and
+    prefix-shared tails alike.
+    """
+    B, Cb, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    q, k = _rope_qk(q, k, positions, cfg)
+    P, ps = cache["kp"].shape[0], cache["kp"].shape[1]
+    kflat = cache["kp"].reshape(P * ps, *cache["kp"].shape[2:])
+    vflat = cache["vp"].reshape(P * ps, *cache["vp"].shape[2:])
+    valid = jnp.arange(Cb, dtype=jnp.int32)[None, :] < lengths[:, None]
+    page_of = jnp.take_along_axis(table, positions // ps, axis=1)  # (B,Cb)
+    widx = jnp.where(valid, page_of * ps + positions % ps, 0).reshape(-1)
+    kflat = kflat.at[widx].set(k.reshape(B * Cb, *k.shape[2:]).astype(kflat.dtype))
+    vflat = vflat.at[widx].set(v.reshape(B * Cb, *v.shape[2:]).astype(vflat.dtype))
+    T = table.shape[1]
+    gidx = (table[:, :, None] * ps + jnp.arange(ps)[None, None, :]).reshape(B, T * ps)
+    kl, vl = kflat[gidx], vflat[gidx]
+    k_pos = jnp.broadcast_to(jnp.arange(T * ps, dtype=jnp.int32)[None], (B, T * ps))
+    window = cfg.window if kind == "attn_local" else 0
+    out = _chunk_attention(q, kl, vl, q_pos=positions, k_pos=k_pos,
+                           window=window, chunk=cfg.attn_chunk)
+    out = out.reshape(B, Cb, -1) @ p["wo"]
+    return out, dict(cache, kp=kflat.reshape(cache["kp"].shape),
+                     vp=vflat.reshape(cache["vp"].shape))
+
+
 def commit_prefill_pages(cache, dense, idx, *, stacked: bool):
     """Scatter a batch-1 dense prefill cache {'k','v','pos'} into the paged
     pools.  ``idx`` (S,) maps logical position j to its flat physical slot
@@ -670,6 +755,64 @@ def commit_prefill_mla(cache, dense, lane, *, stacked: bool):
         kpe = cache["kpe"].at[lane, :S].set(dense["kpe"][0].astype(cache["kpe"].dtype))
         kpos = cache["pos"].at[lane].set(row_pos)
     return dict(cache, ckv=ckv, kpe=kpe, pos=kpos)
+
+
+def mla_chunk_lanes(p, x, cfg: ModelConfig, *, positions, lengths, lanes,
+                    cache):
+    """Batched bucketed/chunked MLA prefill into per-lane latent rows.
+
+    Mirrors ``mla_forward``'s math (absorbed or expanded, per config) over
+    the lane's *stored* latent rows: the chunk's (c_kv, k_pe) are written at
+    their absolute positions first (padded slots write back the old value),
+    the position row is stamped ``j if j < start+length else -1`` (idempotent
+    across chunks, invalidates a reused lane's stale slots), and the chunk
+    queries attend over the full row under the stored-position mask.
+    """
+    B, Cb, _ = x.shape
+    H, nope, v_dim, kvl, rope = (cfg.n_heads, cfg.qk_nope, cfg.v_head_dim,
+                                 cfg.kv_lora, cfg.qk_rope)
+    q_nope, q_pe = _mla_q(p, x, cfg, positions)
+    ckv_t, kpe_t = _mla_kv_latent(p, x, cfg, positions)
+    L = cache["ckv"].shape[1]
+    valid = jnp.arange(Cb, dtype=jnp.int32)[None, :] < lengths[:, None]
+    tgt = jnp.clip(positions, 0, L - 1)                           # (B,Cb)
+    bl = lanes[:, None]
+    old_ckv = cache["ckv"][bl, tgt]
+    old_kpe = cache["kpe"][bl, tgt]
+    ckv = cache["ckv"].at[bl, tgt].set(
+        jnp.where(valid[..., None], ckv_t.astype(cache["ckv"].dtype), old_ckv))
+    kpe = cache["kpe"].at[bl, tgt].set(
+        jnp.where(valid[..., None], kpe_t.astype(cache["kpe"].dtype), old_kpe))
+    ar = jnp.arange(L, dtype=jnp.int32)[None, :]
+    limit = (positions[:, 0] + lengths)[:, None]                  # start+length
+    row_pos = jnp.where(ar < limit, ar, jnp.int32(-1))            # (B,L)
+    kpos = cache["pos"].at[lanes].set(row_pos)
+
+    ckv_rows = ckv[lanes]                                         # (B,L,kvl)
+    kpe_rows = kpe[lanes]                                         # (B,L,rope)
+    if cfg.mla_absorbed:
+        wuk = p["wuk"].reshape(kvl, H, nope)
+        q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope, wuk)
+        fix = ((kvl + rope) / (nope + rope)) ** 0.5
+        q = jnp.concatenate([q_lat, q_pe], axis=-1) * jnp.asarray(fix, q_lat.dtype)
+        q = constrain_attention_q(q)
+        kk = jnp.concatenate([ckv_rows, kpe_rows], axis=-1)[:, :, None, :]
+        vv = ckv_rows[:, :, None, :]
+        o_lat = _chunk_attention(q, kk, vv, q_pos=positions, k_pos=row_pos,
+                                 chunk=cfg.attn_chunk)
+        wuv = p["wuv"].reshape(kvl, H, v_dim)
+        out = jnp.einsum("bqhk,khv->bqhv", o_lat, wuv)
+    else:
+        k_nope = (ckv_rows @ p["wuk"]).reshape(B, L, H, nope)
+        vv = (ckv_rows @ p["wuv"]).reshape(B, L, H, v_dim)
+        q = constrain_attention_q(jnp.concatenate([q_nope, q_pe], axis=-1))
+        kk = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kpe_rows[:, :, None, :], (B, L, H, rope))],
+            axis=-1)
+        out = _chunk_attention(q, kk, vv, q_pos=positions, k_pos=row_pos,
+                               chunk=cfg.attn_chunk)
+    out = out.reshape(B, Cb, H * v_dim) @ p["wo"]
+    return constrain(out, "batch", None, "embed"), dict(cache, ckv=ckv, kpe=kpe, pos=kpos)
 
 
 # ---------------------------------------------------------------------------

@@ -88,7 +88,7 @@ def apply_layer(
     x,
     cfg: ModelConfig,
     kind: str,
-    mode: str,                 # fwd | prefill | decode
+    mode: str,                 # fwd | prefill | chunk | decode
     *,
     positions=None,
     cache: Optional[Dict] = None,
@@ -96,12 +96,29 @@ def apply_layer(
     enc_out=None,
     causal: bool = True,
     table=None,                # (B,T) page table -> paged per-lane decode
+    lengths=None,              # (B,) valid run per row   (mode="chunk")
+    lane_idx=None,             # (B,) decode lane per row (mode="chunk")
+    fresh=None,                # (B,) bool: first chunk — zero prior state
+    live=None,                 # (B,) bool: lane is decoding (mode="decode")
 ) -> Tuple[Any, jnp.ndarray, Optional[Dict]]:
-    """Returns (x_out, aux_loss, new_cache)."""
+    """Returns (x_out, aux_loss, new_cache).
+
+    ``live`` masks per-lane dense cache writes in paged decode: page-pool
+    layers park idle lanes on the scratch page, but MLA latent rows and
+    rec/ssm state have no scratch row — without the mask, the decode step
+    running between prefill chunks would overwrite a mid-chunk lane's
+    carried state with its placeholder-token garbage."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Any] = dict(cache) if cache is not None else {}
     rs = cfg.residual_scale
     lanes = table is not None
+
+    def hold_idle(new, old):
+        if live is None:
+            return new
+        return jax.tree.map(
+            lambda n, o: jnp.where(live.reshape((-1,) + (1,) * (n.ndim - 1)),
+                                   n, o), new, old)
 
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if kind in ("attn", "attn_local"):
@@ -110,6 +127,10 @@ def apply_layer(
         elif mode == "prefill":
             mix, new_cache["kv"] = attn.attn_prefill(p["attn"], h, cfg, kind=kind,
                                                      positions=positions, cache=cache["kv"])
+        elif mode == "chunk":
+            mix, new_cache["kv"] = attn.attn_chunk_paged(p["attn"], h, cfg, kind=kind,
+                                                         positions=positions, lengths=lengths,
+                                                         table=table, cache=cache["kv"])
         elif lanes:
             mix, new_cache["kv"] = attn.attn_decode_paged(p["attn"], h, cfg, kind=kind,
                                                           pos=pos, table=table, cache=cache["kv"])
@@ -122,9 +143,14 @@ def apply_layer(
         elif mode == "prefill":
             mix, new_cache["kv"] = attn.mla_prefill(p["attn"], h, cfg,
                                                     positions=positions, cache=cache["kv"])
+        elif mode == "chunk":
+            mix, new_cache["kv"] = attn.mla_chunk_lanes(p["attn"], h, cfg,
+                                                        positions=positions, lengths=lengths,
+                                                        lanes=lane_idx, cache=cache["kv"])
         elif lanes:
-            mix, new_cache["kv"] = attn.mla_decode_lanes(p["attn"], h, cfg,
-                                                         pos=pos, cache=cache["kv"])
+            mix, kv = attn.mla_decode_lanes(p["attn"], h, cfg,
+                                            pos=pos, cache=cache["kv"])
+            new_cache["kv"] = hold_idle(kv, cache["kv"])
         else:
             mix, new_cache["kv"] = attn.mla_decode(p["attn"], h, cfg, pos=pos, cache=cache["kv"])
     elif kind == "rec":
@@ -133,16 +159,38 @@ def apply_layer(
                 mix, new_cache["state"] = rec_mod.rglru_forward_with_state(p["mix"], h, cfg)
             else:
                 mix = rec_mod.rglru_forward(p["mix"], h, cfg)
+        elif mode == "chunk":
+            # exact-length, fresh-only batched prefill: the engine never pads
+            # or chunks rec rows (the associative scan's tree reassociation is
+            # not bitwise-stable under a padded tail)
+            mix, st = rec_mod.rglru_forward_with_state(p["mix"], h, cfg)
+            new_cache["state"] = jax.tree.map(
+                lambda lc, s: lc.at[lane_idx].set(s.astype(lc.dtype)),
+                cache["state"], st)
         else:
-            mix, new_cache["state"] = rec_mod.rglru_decode(p["mix"], h, cache["state"], cfg)
+            mix, st = rec_mod.rglru_decode(p["mix"], h, cache["state"], cfg)
+            new_cache["state"] = hold_idle(st, cache["state"])
     elif kind == "ssm":
         if mode in ("fwd", "prefill"):
             if mode == "prefill":
                 mix, new_cache["state"] = rec_mod.ssm_forward_with_state(p["mix"], h, cfg)
             else:
                 mix = rec_mod.ssm_forward(p["mix"], h, cfg)
+        elif mode == "chunk":
+            def gather_row(lc):
+                g = lc[lane_idx]
+                mask = fresh.reshape((-1,) + (1,) * (g.ndim - 1))
+                return jnp.where(mask, jnp.zeros((), g.dtype), g)
+
+            prev = jax.tree.map(gather_row, cache["state"])
+            mix, st = rec_mod.ssm_forward_with_state(p["mix"], h, cfg,
+                                                     state=prev, lengths=lengths)
+            new_cache["state"] = jax.tree.map(
+                lambda lc, s: lc.at[lane_idx].set(s.astype(lc.dtype)),
+                cache["state"], st)
         else:
-            mix, new_cache["state"] = rec_mod.ssm_decode(p["mix"], h, cache["state"], cfg)
+            mix, st = rec_mod.ssm_decode(p["mix"], h, cache["state"], cfg)
+            new_cache["state"] = hold_idle(st, cache["state"])
     else:
         raise ValueError(kind)
     x = x + rs * mix
@@ -354,6 +402,10 @@ def apply_stack(
     enc_out=None,
     causal: bool = True,
     table=None,
+    lengths=None,
+    lane_idx=None,
+    fresh=None,
+    live=None,
 ) -> Tuple[Any, jnp.ndarray, Optional[Dict]]:
     prefix, period, tail, n_periods = stack_structure(cfg)
     aux_total = jnp.zeros((), jnp.float32)
@@ -362,7 +414,8 @@ def apply_stack(
     def run_layer(p, x, kind, cache):
         return apply_layer(p, x, cfg, kind, mode, positions=positions,
                            cache=cache, pos=pos, enc_out=enc_out, causal=causal,
-                           table=table)
+                           table=table, lengths=lengths, lane_idx=lane_idx,
+                           fresh=fresh, live=live)
 
     # ---- prefix (unrolled)
     for i, kind in enumerate(prefix):

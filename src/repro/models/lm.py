@@ -153,19 +153,48 @@ class LM:
                jnp.arange(page_size, dtype=jnp.int32)[None, :]).reshape(-1)[:prompt_len]
         return commit_stack_prefill(self.cfg, paged, dense, idx, lane)
 
-    def decode_step_lanes(self, params, token, cache: Dict, table, pos):
+    def prefill_commit_batch(self, params, tokens, paged: Dict, tables, lanes,
+                             starts, lengths, fresh):
+        """Batched bucketed/chunked prefill straight into the paged cache.
+
+        ``tokens`` (B,Cb) right-padded chunk tokens, ``tables`` (B,T)
+        page-table rows, ``lanes`` (B,) decode lanes, ``starts`` (B,)
+        absolute position of each row's first token, ``lengths`` (B,) valid
+        run, ``fresh`` (B,) bool first-chunk flag (zeroes prior recurrent
+        state).  One signature per (Cb, B) bucket pair serves plain batched
+        prefill (start=0), chunk continuation, and prefix-shared tails.
+        Returns (logits (B,1,V) at each row's last valid token, new_paged).
+        """
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        Cb = tokens.shape[1]
+        positions = starts[:, None] + jnp.arange(Cb, dtype=jnp.int32)[None, :]
+        x, _, paged = apply_stack(params["stack"], x, cfg, "chunk",
+                                  positions=positions, caches=paged,
+                                  table=tables, lengths=lengths,
+                                  lane_idx=lanes, fresh=fresh)
+        last = jnp.take_along_axis(
+            x, (lengths - 1).astype(jnp.int32)[:, None, None], axis=1)
+        return self._logits(params, last), paged
+
+    def decode_step_lanes(self, params, token, cache: Dict, table, pos,
+                          live=None):
         """Per-lane decode: token (B,1); table (B,T) page tables; pos (B,)
-        per-lane write positions (free lanes point at the scratch page)."""
+        per-lane write positions (free lanes point at the scratch page);
+        ``live`` (B,) bool holds idle lanes' per-lane dense cache rows (MLA
+        latents, rec/ssm state — layers with no scratch row)."""
         cfg = self.cfg
         x = self._embed(params, token)
         x, _, cache = apply_stack(params["stack"], x, cfg, "decode",
-                                  caches=cache, pos=pos, table=table)
+                                  caches=cache, pos=pos, table=table, live=live)
         return self._logits(params, x), cache
 
-    def serve_step_lanes(self, params, token, cache: Dict, table, pos):
+    def serve_step_lanes(self, params, token, cache: Dict, table, pos,
+                         live=None):
         from repro.serving.sampling import sample_greedy
 
-        logits, cache = self.decode_step_lanes(params, token, cache, table, pos)
+        logits, cache = self.decode_step_lanes(params, token, cache, table,
+                                               pos, live)
         return sample_greedy(logits), cache
 
 

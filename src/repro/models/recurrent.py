@@ -22,10 +22,14 @@ from .common import constrain, dense_init
 # ---------------------------------------------------------------------------
 
 
-def causal_conv(u, w, state=None):
+def causal_conv(u, w, state=None, lengths=None):
     """u: (B,S,C); w: (k,C) depthwise causal. state: (B,k-1,C) prior inputs.
 
     Returns (y, new_state) where new_state holds the last k-1 inputs.
+    With per-row ``lengths`` (B,) the new state gathers the last k-1 inputs
+    *of the valid run* (right-padded batched prefill), reaching into the
+    prior state for rows shorter than k-1; the padded tail never leaks into
+    the carried state.
     """
     k = w.shape[0]
     if state is None:
@@ -34,7 +38,14 @@ def causal_conv(u, w, state=None):
         up = jnp.concatenate([state.astype(u.dtype), u], axis=1)
     S = u.shape[1]
     y = sum(w[j].astype(jnp.float32) * up[:, j : j + S].astype(jnp.float32) for j in range(k))
-    new_state = up[:, -(k - 1):] if k > 1 else None
+    if k <= 1:
+        new_state = None
+    elif lengths is None:
+        new_state = up[:, -(k - 1):]
+    else:
+        # valid input t sits at up[:, t + k - 1]; want t = length-k+1..length-1
+        idx = (lengths[:, None] + jnp.arange(k - 1, dtype=jnp.int32)[None, :])
+        new_state = jnp.take_along_axis(up, idx[:, :, None], axis=1)
     return y.astype(u.dtype), new_state
 
 
@@ -176,9 +187,14 @@ def _segsum(x):
     return jnp.where(mask, d, -jnp.inf)
 
 
-def ssd_chunked(x, dt_a, B, C, chunk: int):
+def ssd_chunked(x, dt_a, B, C, chunk: int, init_state=None):
     """Chunked SSD (Mamba-2 alg. 3). x: (b,s,h,p) pre-multiplied by dt;
-    dt_a: (b,s,h) = A*dt (<=0); B, C: (b,s,h,n). Returns (b,s,h,p)."""
+    dt_a: (b,s,h) = A*dt (<=0); B, C: (b,s,h,n). Returns (b,s,h,p).
+
+    ``init_state`` (b,h,p,n) f32 seeds the inter-chunk recurrence (chunked
+    serving prefill carries the state across calls); the scan combine is the
+    same ``dec*prev + st`` the single-call recurrence applies, so splitting a
+    sequence at ``chunk``-aligned boundaries reproduces the one-shot result."""
     b, s_orig, h, p_dim = x.shape
     n = B.shape[-1]
     L = min(chunk, s_orig)
@@ -218,7 +234,8 @@ def ssd_chunked(x, dt_a, B, C, chunk: int):
         new = dec[:, :, None, None] * prev + st
         return new, prev
 
-    init = jnp.zeros((b, h, p_dim, n), jnp.float32)
+    init = (jnp.zeros((b, h, p_dim, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
     final_state, prev_states = jax.lax.scan(
         scan_fn, init, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1))
     )
@@ -230,7 +247,7 @@ def ssd_chunked(x, dt_a, B, C, chunk: int):
     return y, final_state
 
 
-def _ssm_split(p, x, cfg: ModelConfig, conv_state=None):
+def _ssm_split(p, x, cfg: ModelConfig, conv_state=None, lengths=None):
     H, N, G = cfg.ssm_heads, cfg.d_state, cfg.ssm_groups
     z = x @ p["wz"]
     xs = x @ p["wx"]
@@ -238,9 +255,9 @@ def _ssm_split(p, x, cfg: ModelConfig, conv_state=None):
     C_ = x @ p["wc"]
     dt = x @ p["wdt"]                                                 # (B,S,H)
     cs = conv_state or {}
-    xs, ncx = causal_conv(xs, p["conv_x"], cs.get("x"))
-    B_, ncb = causal_conv(B_, p["conv_b"], cs.get("b"))
-    C_, ncc = causal_conv(C_, p["conv_c"], cs.get("c"))
+    xs, ncx = causal_conv(xs, p["conv_x"], cs.get("x"), lengths)
+    B_, ncb = causal_conv(B_, p["conv_b"], cs.get("b"), lengths)
+    C_, ncc = causal_conv(C_, p["conv_c"], cs.get("c"), lengths)
     new_conv = {"x": ncx, "b": ncb, "c": ncc}
     xs = jax.nn.silu(xs)
     B_ = jax.nn.silu(B_)
@@ -253,6 +270,13 @@ def _ssm_split(p, x, cfg: ModelConfig, conv_state=None):
     B_ = jnp.repeat(B_, rep, axis=2)
     C_ = jnp.repeat(C_, rep, axis=2)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if lengths is not None:
+        # zero dt on padded rows makes the padding exact for the SSD scan:
+        # x*dt contributes nothing and the decay exp(dt*A)=1 carries the
+        # state through untouched (same identity ssd_chunked's internal
+        # zero-padding relies on)
+        valid = jnp.arange(S, dtype=jnp.int32)[None, :] < lengths[:, None]
+        dt = jnp.where(valid[..., None], dt, 0.0)
     return z, xs, B_, C_, dt, new_conv
 
 
@@ -264,10 +288,13 @@ def _ssm_out(p, y, z, x, cfg: ModelConfig):
     return y @ p["wout"]
 
 
-def _ssm_core(p, x, cfg: ModelConfig):
-    z, xs, B_, C_, dt, new_conv = _ssm_split(p, x, cfg)
+def _ssm_core(p, x, cfg: ModelConfig, state=None, lengths=None):
+    conv_state = state["conv"] if state is not None else None
+    init_h = state["h"] if state is not None else None
+    z, xs, B_, C_, dt, new_conv = _ssm_split(p, x, cfg, conv_state, lengths)
     A = -jnp.exp(p["a_log"])                                          # (H,)
-    y, final = ssd_chunked(xs.astype(jnp.float32) * dt[..., None], dt * A, B_, C_, cfg.ssm_chunk)
+    y, final = ssd_chunked(xs.astype(jnp.float32) * dt[..., None], dt * A, B_, C_, cfg.ssm_chunk,
+                           init_state=init_h)
     y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(*x.shape[:2], cfg.d_inner)
     out = constrain(_ssm_out(p, y, z, x, cfg), "batch", None, "embed")
@@ -280,9 +307,13 @@ def ssm_forward(p, x, cfg: ModelConfig):
     return out
 
 
-def ssm_forward_with_state(p, x, cfg: ModelConfig):
-    """Prefill: full forward + final (h, conv) state."""
-    out, final, new_conv = _ssm_core(p, x, cfg)
+def ssm_forward_with_state(p, x, cfg: ModelConfig, state=None, lengths=None):
+    """Prefill: full forward + final (h, conv) state.
+
+    ``state`` seeds a chunk-continuation prefill (the previous chunk's
+    {'h','conv'}); ``lengths`` (B,) marks per-row valid runs in a
+    right-padded batched prefill (dt masked to zero past them)."""
+    out, final, new_conv = _ssm_core(p, x, cfg, state, lengths)
     return out, {"h": final, "conv": new_conv}
 
 

@@ -16,6 +16,6 @@ Layers (each independently testable):
 """
 from .engine import EngineConfig, ServeEngine, ServeRequest, load_effective_params  # noqa: F401
 from .kv_pages import PageAllocator, needed_pages  # noqa: F401
-from .sampling import FeedBuilder, sample_greedy  # noqa: F401
+from .sampling import FeedBuilder, lane_keys, sample_greedy, sample_topk  # noqa: F401
 from .scheduler import ContinuousScheduler  # noqa: F401
 from .telemetry import Telemetry  # noqa: F401

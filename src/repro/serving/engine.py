@@ -1,13 +1,22 @@
 """ServeEngine: continuous batching over the paged analog decode caches.
 
-Prefill/decode disaggregation: prefills run as dedicated batch-1 calls
-through the model's dense prefill path (reusing the exact math of the
-training-time forward), then hand their KV off to the paged pools via the
-gather-free ``commit_prefill`` scatter.  Decode runs one jitted
-``serve_step_lanes`` per engine step across all lanes — every lane at its
-own position, free lanes pointed at the scratch page — so a freed lane
-admits the oldest waiting prefill on the next step without recompiling or
-reshaping anything.
+Prefill/decode disaggregation with an overlap-free prefill path: admissions
+are grouped into power-of-two length buckets and run through ONE jitted
+``prefill_commit_batch`` per bucket per step — a multi-lane masked prefill
+that scatters each row's K/V straight into its pages (no intermediate dense
+cache, no per-admission dispatch), collapsing retraces from O(#distinct
+prompt lengths) to O(log max_len) and admission cost to one call per bucket.
+Long prompts are split into ``prefill_chunk``-sized chunks interleaved with
+decode steps (each chunk commits its pages and carries recurrent/latent
+state forward), bounding the decode stall any single admission can inflict.
+With ``prefix_share`` on, admissions whose leading full prompt pages hash-hit
+the ``PrefixCache`` map those table-row entries at shared (refcounted,
+read-only) pages and only prefill the unshared tail.
+
+Decode runs one jitted ``serve_step_lanes`` per engine step across all
+lanes — every lane at its own position, free and mid-chunk lanes pointed at
+the scratch page — so a freed lane admits the oldest waiting prefill on the
+next step without recompiling or reshaping anything.
 
 The engine serves the *effective* analog weights: ``load_effective_params``
 restores a training checkpoint through the elastic re-key path and merges
@@ -24,8 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kv_pages import PageAllocator, SCRATCH_PAGE, needed_pages
-from .sampling import FeedBuilder, sample_greedy
+from .kv_pages import PageAllocator, PrefixCache, SCRATCH_PAGE, needed_pages
+from .sampling import FeedBuilder, lane_keys, sample_greedy, sample_topk
 from .scheduler import ContinuousScheduler, DECODE, ServeRequest
 from .telemetry import Telemetry
 
@@ -39,6 +48,14 @@ class EngineConfig:
     stats_every: int = 0          # emit engine_stats every N steps (0 = off)
     log_path: str = ""            # JSON log lines (one object per line)
     manifest_path: str = ""       # run-artifact manifest written at shutdown
+    prefill_chunk: int = 0        # split prompts into chunks of this many
+                                  # tokens (0 = whole-prompt; page-size multiple)
+    prefill_budget: int = 0       # max prefill tokens dispatched per step
+                                  # (0 = unlimited) — caps decode jitter when
+                                  # many lanes are mid-chunk at once
+    prefix_share: bool = False    # CoW prompt-prefix page sharing
+    temperature: float = 0.0      # 0 = greedy (the identity-test default)
+    top_k: int = 0                # 0 = no top-k filter
 
     @property
     def table_width(self) -> int:
@@ -72,6 +89,29 @@ def load_effective_params(model, ckpt_dir: str, algorithm: str, smoke: bool):
     return merge_effective(state["params"], state["tiles"], trainer.cfg.tile)
 
 
+def _pow2_ceil(n: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+@dataclasses.dataclass
+class _Segment:
+    """One prefill work item: ``req``'s prompt tokens [start, start+length)
+    going to ``lane``.  ``fresh`` marks the request's first segment (zero
+    prior recurrent state)."""
+    req: ServeRequest
+    lane: int
+    start: int
+    length: int
+    fresh: bool
+
+    @property
+    def final(self) -> bool:
+        return self.start + self.length >= self.req.prompt_len
+
+
 class ServeEngine:
     def __init__(self, model, params, ecfg: EngineConfig,
                  telemetry: Optional[Telemetry] = None, arch: str = "",
@@ -87,51 +127,102 @@ class ServeEngine:
         self.checkpoint = checkpoint or {"restored": False, "dir": "", "algorithm": ""}
         self.telemetry = telemetry or Telemetry(log_path=ecfg.log_path)
 
+        # per-family capability gates (all off -> exact-length fresh batches)
+        kinds = set(model.cfg.layer_kinds)
+        # padding a rec row would re-associate the RG-LRU associative scan
+        self._pad_ok = "rec" not in kinds
+        chunk = int(ecfg.prefill_chunk)
+        chunk_ok = (chunk > 0 and self._pad_ok
+                    and chunk % ecfg.page_size == 0
+                    and ("ssm" not in kinds or chunk % model.cfg.ssm_chunk == 0))
+        self._chunk = chunk if chunk_ok else 0
+        # shared pages only make sense for page-pool layers; MLA latents and
+        # recurrent state are per-lane and cannot be mapped read-only
+        self._share = bool(ecfg.prefix_share) and kinds <= {"attn", "attn_local"}
+
         self.allocator = PageAllocator(ecfg.num_pages, reserved=1)
+        self.prefix_cache = (PrefixCache(self.allocator, ecfg.page_size)
+                             if self._share else None)
         self.scheduler = ContinuousScheduler(
-            ecfg.lanes, self.allocator, ecfg.page_size, ecfg.table_width)
+            ecfg.lanes, self.allocator, ecfg.page_size, ecfg.table_width,
+            prefix_cache=self.prefix_cache)
         self._feed = FeedBuilder(model.cfg)
 
         self._paged = model.init_paged_cache(
             ecfg.lanes, ecfg.num_pages, ecfg.page_size, ecfg.max_len)
 
-        # one jitted call per admission: the batch-1 dense cache is created
-        # *inside* the trace (free zeros, no per-leaf host allocation), the
-        # first token is sampled in-graph, and the KV lands in the pages —
-        # no intermediate dense cache ever leaves the device
-        def prefill_commit(params, feed, paged, row, lane, *, prompt_len,
-                           page_size):
-            dense = model.init_cache(1, prompt_len)
-            logits, dense = model.prefill(params, feed, dense)
-            tok = sample_greedy(logits)
-            paged = model.commit_prefill(paged, dense, row, lane,
-                                         prompt_len=prompt_len,
-                                         page_size=page_size)
+        # ONE jitted entrypoint serves plain bucketed prefill (start=0),
+        # chunk continuation, and prefix-shared tails: the masked multi-lane
+        # prefill scatters K/V straight into the rows' pages and samples the
+        # last valid position in-graph.  Signatures are (len bucket, batch
+        # bucket) pairs — O(log max_len * log lanes) total.
+        temp, top_k = float(ecfg.temperature), int(ecfg.top_k)
+        T = ecfg.table_width
+
+        def prefill_batch(params, packed, paged, tw):
+            # packed (B, Cb+tw+5) int32 — ONE host upload per bucketed call:
+            # [chunk tokens | table row | lane | start | length | fresh | seed]
+            # ``tw`` (static) is the pow2 page-span bucket: only the table
+            # columns the chunk can actually reach ride along, so the paged
+            # attention gathers tw*page_size rows instead of the full width
+            Cb = packed.shape[1] - tw - 5
+            tokens = packed[:, :Cb]
+            tables = packed[:, Cb:Cb + tw]
+            lanes, starts = packed[:, Cb + tw], packed[:, Cb + tw + 1]
+            lengths = packed[:, Cb + tw + 2]
+            fresh = packed[:, Cb + tw + 3] != 0
+            seeds = packed[:, Cb + tw + 4]
+            logits, paged = model.prefill_commit_batch(
+                params, tokens, paged, tables, lanes, starts, lengths, fresh)
+            if temp > 0.0:
+                tok = sample_topk(logits, temp, top_k,
+                                  lane_keys(seeds, starts + lengths))
+            else:
+                tok = sample_greedy(logits)
             return tok, paged
 
-        self._prefill_commit = jax.jit(
-            prefill_commit, static_argnames=("prompt_len", "page_size"),
-            donate_argnums=(2,))
+        self._prefill_batch = jax.jit(prefill_batch, static_argnums=(3,),
+                                      donate_argnums=(2,))
+        self.prefill_signatures: set = set()
 
         # the decode step advances every lane's position on-device; free
-        # lanes drift past their (all-scratch) table rows, which is
-        # harmless — their writes/reads clamp to the scratch page and their
-        # outputs are discarded — and admission rewrites their rows anyway
-        def step_fn(params, last, cache, table, pos):
-            toks, cache = model.serve_step_lanes(params, last, cache, table,
-                                                 pos)
-            return toks, cache, pos + 1
+        # (and mid-chunk) lanes drift past their all-scratch table rows,
+        # which is harmless — their writes/reads clamp to the scratch page
+        # and their outputs are discarded.  Lane state rides in ONE packed
+        # (B, T+4) int32 array — [table row | pos | last | seed | live] — so
+        # a dirty step re-uploads one host array and steady-state decode
+        # donates the returned state (pos+1 and the sampled token are
+        # written back in-graph) straight into the next step
+        def step_fn(params, cache, state):
+            table, pos = state[:, :T], state[:, T]
+            last, seeds = state[:, T + 1:T + 2], state[:, T + 2]
+            live = state[:, T + 3] != 0
+            if temp > 0.0:
+                logits, cache = model.decode_step_lanes(params, last, cache,
+                                                        table, pos, live)
+                toks = sample_topk(logits, temp, top_k,
+                                   lane_keys(seeds, pos + 1))
+            else:
+                toks, cache = model.serve_step_lanes(params, last, cache,
+                                                     table, pos, live)
+            state = state.at[:, T].add(1).at[:, T + 1].set(toks[:, 0])
+            return toks, cache, state
 
-        self._step = jax.jit(step_fn, donate_argnums=(2,))
+        self._step = jax.jit(step_fn, donate_argnums=(1, 2))
 
         # host-side lane state, mirrored on device between admissions so
-        # steady-state decode re-uses device arrays instead of re-uploading
-        T = ecfg.table_width
-        self._table = np.full((ecfg.lanes, T), SCRATCH_PAGE, np.int32)
-        self._pos = np.zeros((ecfg.lanes,), np.int32)
-        self._last = np.zeros((ecfg.lanes, 1), np.int32)
-        self._dev = None          # (last, table, pos) device mirrors
+        # steady-state decode re-uses device arrays instead of re-uploading;
+        # the named mirrors are views aliasing one packed int32 block
+        self._ls = np.zeros((ecfg.lanes, T + 4), np.int32)
+        self._ls[:, :T] = SCRATCH_PAGE
+        self._table = self._ls[:, :T]
+        self._pos = self._ls[:, T]
+        self._last = self._ls[:, T + 1:T + 2]
+        self._seeds = self._ls[:, T + 2]
+        self._live = self._ls[:, T + 3]
+        self._dev = None          # packed lane-state device mirror
         self._dirty = True        # lane state changed since last upload
+        self._cont: Dict[int, _Segment] = {}   # lane -> next pending chunk
 
     # ----------------------------------------------------------------- run
     def submit(self, req: ServeRequest) -> None:
@@ -145,45 +236,133 @@ class ServeEngine:
         self._table[lane] = SCRATCH_PAGE
         self._pos[lane] = 0
         self._last[lane] = 0
+        self._seeds[lane] = 0
+        self._live[lane] = False
         self._dirty = True
 
-    def _admit_and_prefill(self, step: int) -> None:
-        for adm in self.scheduler.admit(step):
-            req, lane = adm.request, adm.lane
-            self.telemetry.request_admitted(req.request_id, lane,
-                                            len(adm.pages), step)
-            row = self.scheduler.table_row(req)
-            tok, self._paged = self._prefill_commit(
-                self.params, self._feed(req.prompt[None]), self._paged,
-                jnp.asarray(row), lane, prompt_len=req.prompt_len,
-                page_size=self.ecfg.page_size)
-            self.telemetry.prefills += 1
-            first = int(np.asarray(tok)[0, 0])
-            req.tokens.append(first)
-            req.state = DECODE
-            self.telemetry.first_token(req.request_id)
-            self._table[lane] = row
-            self._pos[lane] = req.prompt_len
-            self._last[lane, 0] = first
-            self._dirty = True
-            if len(req.tokens) >= req.max_new_tokens:
-                self._finish(lane, step)
+    # ------------------------------------------------------------- prefill
+    def _len_bucket(self, n: int) -> int:
+        return _pow2_ceil(n) if self._pad_ok else n
 
+    def _segment(self, req: ServeRequest, lane: int, start: int,
+                 fresh: bool) -> _Segment:
+        remaining = req.prompt_len - start
+        seg = min(self._chunk, remaining) if self._chunk else remaining
+        return _Segment(req, lane, start, seg, fresh)
+
+    def _gather_segments(self, step: int) -> List[_Segment]:
+        """This step's prefill work: pending chunk continuations first (one
+        chunk per lane per step), then fresh admissions.  A prefill token
+        budget (``ecfg.prefill_budget``) bounds the work batched into one
+        step — continuations past it wait, admissions past it defer — so a
+        pile-up of mid-chunk lanes cannot stretch every decode interval."""
+        # the budget is a chunked-mode knob: segments then have bounded
+        # length, so capping tokens per step caps the decode stall
+        budget = (self.ecfg.prefill_budget or None) if self._chunk else None
+        work: List[_Segment] = []
+        for lane in sorted(self._cont):
+            seg = self._cont[lane]
+            if budget is not None and work and budget < seg.length:
+                break
+            del self._cont[lane]
+            if budget is not None:
+                budget -= seg.length
+            work.append(seg)
+        limit = None
+        if budget is not None:
+            limit = max(0, budget) // self._chunk
+            if not work and limit == 0:
+                limit = 1      # keep making progress even on a tiny budget
+            if limit == 0:
+                return work
+        for adm in self.scheduler.admit(step, limit):
+            req, lane = adm.request, adm.lane
+            n_chunks = (1 if not self._chunk else
+                        -(-(req.prompt_len - len(adm.shared_pages)
+                            * self.ecfg.page_size) // self._chunk))
+            self.telemetry.request_admitted(
+                req.request_id, lane, len(adm.pages), step,
+                shared_pages=len(adm.shared_pages), chunks=n_chunks)
+            start = len(adm.shared_pages) * self.ecfg.page_size
+            work.append(self._segment(req, lane, start, True))
+        return work
+
+    def _dispatch_group(self, Cb: int, items: List[_Segment], step: int):
+        """Pad ``items`` to a power-of-two batch (replicating item 0 — the
+        duplicate rows scatter identical values) and run one jitted call."""
+        Bb = _pow2_ceil(len(items))
+        rows = items + [items[0]] * (Bb - len(items))
+        ps, T = self.ecfg.page_size, self.ecfg.table_width
+        span = max(-(-(seg.start + seg.length) // ps) for seg in items)
+        tw = min(T, _pow2_ceil(span))
+        packed = np.zeros((Bb, Cb + tw + 5), np.int32)
+        for i, seg in enumerate(rows):
+            packed[i, :seg.length] = seg.req.prompt[seg.start:seg.start + seg.length]
+            packed[i, Cb:Cb + tw] = self.scheduler.table_row(seg.req)[:tw]
+            packed[i, Cb + tw] = seg.lane
+            packed[i, Cb + tw + 1] = seg.start
+            packed[i, Cb + tw + 2] = seg.length
+            packed[i, Cb + tw + 3] = int(seg.fresh)
+            packed[i, Cb + tw + 4] = seg.req.seed
+        sig = (Cb, Bb, tw)
+        if sig not in self.prefill_signatures:
+            self.prefill_signatures.add(sig)
+            self.telemetry.retraces += 1
+        tok, self._paged = self._prefill_batch(
+            self.params, jnp.asarray(packed), self._paged, tw)
+        self.telemetry.prefill_batches += 1
+        self.telemetry.prefill_batch(step, Cb, len(items))
+        return tok
+
+    def _admit_and_prefill(self, step: int) -> None:
+        work = self._gather_segments(step)
+        if not work:
+            return
+        groups: Dict[int, List[_Segment]] = {}
+        for seg in work:
+            groups.setdefault(self._len_bucket(seg.length), []).append(seg)
+        # dispatch every bucket, then sync tokens once per step
+        pending = [(Cb, items, self._dispatch_group(Cb, items, step))
+                   for Cb, items in sorted(groups.items())]
+        for _, items, tok in pending:
+            host = np.asarray(tok)
+            for i, seg in enumerate(items):
+                self.telemetry.chunks += 1
+                req, lane = seg.req, seg.lane
+                if not seg.final:
+                    self._cont[lane] = self._segment(
+                        req, lane, seg.start + seg.length, False)
+                    continue
+                first = int(host[i, 0])
+                req.tokens.append(first)
+                req.state = DECODE
+                self.telemetry.prefills += 1
+                self.telemetry.first_token(req.request_id)
+                if self._share:
+                    self.scheduler.publish_prefix(req)
+                self._table[lane] = self.scheduler.table_row(req)
+                self._pos[lane] = req.prompt_len
+                self._last[lane, 0] = first
+                self._seeds[lane] = req.seed
+                self._live[lane] = True
+                self._dirty = True
+                if len(req.tokens) >= req.max_new_tokens:
+                    self._finish(lane, step)
+
+    # -------------------------------------------------------------- decode
     def _decode_once(self, step: int) -> None:
         active = self.scheduler.active()
-        if not active:
+        decoding = {l: r for l, r in active.items() if r.state == DECODE}
+        if not decoding:
             return
         if self._dirty:
-            self._dev = (jnp.asarray(self._last), jnp.asarray(self._table),
-                         jnp.asarray(self._pos))
+            self._dev = jnp.asarray(self._ls)
             self._dirty = False
-        last, table, pos = self._dev
-        toks, self._paged, pos = self._step(self.params, last, self._paged,
-                                            table, pos)
-        self._dev = (toks, table, pos)
+        toks, self._paged, self._dev = self._step(self.params, self._paged,
+                                                  self._dev)
         host_toks = np.asarray(toks)
         self.telemetry.steps += 1
-        for lane, req in active.items():
+        for lane, req in decoding.items():
             tok = int(host_toks[lane, 0])
             req.tokens.append(tok)
             self.telemetry.token(req.request_id)
@@ -209,18 +388,36 @@ class ServeEngine:
                                             self.allocator.free_pages)
             step += 1
         wall = time.monotonic() - t0
-        summary = self.telemetry.run_summary(wall)
+        summary = self.telemetry.run_summary(wall, extras=self._run_extras())
         self.shutdown(wall)
         return ({r.request_id: np.asarray(r.tokens, np.int32) for r in requests},
                 summary)
+
+    def _run_extras(self) -> Dict[str, Any]:
+        ex: Dict[str, Any] = {
+            "prefill_batches": self.telemetry.prefill_batches,
+            "prefill_chunks": self.telemetry.chunks,
+            "retraces": self.telemetry.retraces,
+        }
+        if self.prefix_cache is not None:
+            probes = self.prefix_cache.hits + self.prefix_cache.misses
+            ex["prefix_hit_rate"] = (self.prefix_cache.hits / probes
+                                     if probes else 0.0)
+        return ex
 
     # ------------------------------------------------------------ shutdown
     def manifest_meta(self) -> Dict[str, Any]:
         e = self.ecfg
         return {"mode": "continuous", "lanes": e.lanes, "page_size": e.page_size,
-                "num_pages": e.num_pages, "table_width": e.table_width}
+                "num_pages": e.num_pages, "table_width": e.table_width,
+                "prefill_chunk": self._chunk,
+                "prefill_budget": int(e.prefill_budget) if self._chunk else 0,
+                "prefix_share": self._share,
+                "temperature": float(e.temperature), "top_k": int(e.top_k)}
 
     def shutdown(self, wall_s: float, status: str = "completed") -> Optional[Dict]:
+        if self.prefix_cache is not None:
+            self.prefix_cache.check_consistent()
         manifest = None
         if self.ecfg.manifest_path:
             manifest = self.telemetry.write_manifest(

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
@@ -17,6 +18,35 @@ def sample_greedy(logits) -> jnp.ndarray:
     """Greedy next token from (B, S, V) logits: argmax over the vocabulary
     at the last position, shaped (B, 1) int32 for the decode step."""
     return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+
+def sample_topk(logits, temperature: float, k: int, key) -> jnp.ndarray:
+    """Temperature + top-k next token from (B, S, V) logits at the last
+    position, shaped (B, 1) int32.
+
+    ``key`` is a batch of per-lane PRNG keys, shape (B,) (each lane draws
+    from its own request-seeded stream).  ``k`` is static: 0 disables the
+    top-k filter (pure temperature sampling); ``temperature`` <= 0 falls
+    back to greedy so a single jitted signature serves both.
+    """
+    last = logits[:, -1].astype(jnp.float32)                          # (B,V)
+    if temperature <= 0.0:
+        return jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+    scaled = last / jnp.float32(temperature)
+    if k > 0 and k < last.shape[-1]:
+        kth = jax.lax.top_k(scaled, k)[0][:, -1:]                     # (B,1)
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    tok = jax.vmap(lambda kk, row: jax.random.categorical(kk, row))(key, scaled)
+    return tok.astype(jnp.int32)[:, None]
+
+
+def lane_keys(seeds, pos) -> jnp.ndarray:
+    """Per-lane PRNG keys from per-request ``seeds`` (B,) and the lane's
+    current ``pos`` (B,): fold the position into the seeded stream so every
+    sampled token gets a fresh, replayable key."""
+    def one(seed, p):
+        return jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(0), seed), p)
+    return jax.vmap(one)(seeds, pos)
 
 
 class FeedBuilder:

@@ -78,7 +78,7 @@ _nonneg_int = {"type": "integer", "minimum": 0}
 _req_id = {"type": "string"}
 
 LOG_EVENTS = ("request_submitted", "request_admitted", "request_finished",
-              "engine_stats", "run_summary")
+              "engine_stats", "run_summary", "prefill_batch")
 
 LOG_ENVELOPE_SCHEMA = {
     "type": "object",
@@ -107,7 +107,21 @@ EVENT_SCHEMAS: Dict[str, Dict[str, Any]] = {
         "properties": {
             "ts": _nonneg_number, "event": {"const": "request_admitted"},
             "request_id": _req_id, "lane": _nonneg_int,
-            "n_pages": {"type": "integer", "minimum": 1}, "step": _nonneg_int,
+            # n_pages may be 0 when the whole footprint is prefix-shared
+            "n_pages": _nonneg_int, "step": _nonneg_int,
+            # optional (absent pre-PR9): CoW prefix sharing + chunked prefill
+            "shared_pages": _nonneg_int,
+            "chunks": {"type": "integer", "minimum": 1},
+        },
+    },
+    "prefill_batch": {
+        "type": "object", "additionalProperties": False,
+        "required": ["ts", "event", "step", "bucket", "batch"],
+        "properties": {
+            "ts": _nonneg_number, "event": {"const": "prefill_batch"},
+            "step": _nonneg_int,
+            "bucket": {"type": "integer", "minimum": 1},   # padded chunk len
+            "batch": {"type": "integer", "minimum": 1},    # real rows in call
         },
     },
     "request_finished": {
@@ -140,6 +154,9 @@ EVENT_SCHEMAS: Dict[str, Dict[str, Any]] = {
             "ts": _nonneg_number, "event": {"const": "run_summary"},
             "requests": _nonneg_int, "generated_tokens": _nonneg_int,
             "wall_s": _nonneg_number, "tokens_per_s": _nonneg_number,
+            # optional engine extras (absent from standalone telemetry runs)
+            "prefill_batches": _nonneg_int, "prefill_chunks": _nonneg_int,
+            "retraces": _nonneg_int, "prefix_hit_rate": _nonneg_number,
         },
     },
 }
@@ -182,6 +199,12 @@ MANIFEST_SCHEMA = {
                 "page_size": {"type": "integer", "minimum": 1},
                 "num_pages": {"type": "integer", "minimum": 2},
                 "table_width": {"type": "integer", "minimum": 1},
+                # optional (absent pre-PR9): prefill-path feature toggles
+                "prefill_chunk": _nonneg_int,
+                "prefill_budget": _nonneg_int,
+                "prefix_share": {"type": "boolean"},
+                "temperature": _nonneg_number,
+                "top_k": _nonneg_int,
             },
         },
         "checkpoint": {
@@ -204,8 +227,10 @@ MANIFEST_SCHEMA = {
         "latency_s": {
             "type": "object", "additionalProperties": False,
             "required": ["ttft", "tpot", "e2e"],
+            # "gap" (optional, absent pre-PR9): pooled inter-token intervals
+            # across all requests — the jitter metric chunked prefill targets
             "properties": {"ttft": _latency_block, "tpot": _latency_block,
-                           "e2e": _latency_block},
+                           "e2e": _latency_block, "gap": _latency_block},
         },
         "throughput": {
             "type": "object", "additionalProperties": False,
@@ -213,6 +238,9 @@ MANIFEST_SCHEMA = {
             "properties": {
                 "tokens_per_s": _nonneg_number, "wall_s": _nonneg_number,
                 "steps": _nonneg_int, "prefills": _nonneg_int,
+                # optional prefill-path counters (absent pre-PR9)
+                "prefill_batches": _nonneg_int, "prefill_chunks": _nonneg_int,
+                "retraces": _nonneg_int,
             },
         },
         "artifacts": {

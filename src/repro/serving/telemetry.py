@@ -60,6 +60,7 @@ class RequestTimeline:
     submitted_s: float = 0.0
     admitted_s: float = 0.0
     first_token_s: float = 0.0
+    last_token_s: float = 0.0
     finished_s: float = 0.0
     n_tokens: int = 0
 
@@ -109,7 +110,11 @@ class Telemetry:
         self.logger = JsonLogger(log_sink)
         self.timelines: Dict[str, RequestTimeline] = {}
         self.steps = 0
-        self.prefills = 0
+        self.prefills = 0            # completed request prefills
+        self.prefill_batches = 0     # jitted bucketed prefill dispatches
+        self.chunks = 0              # prefill segments (chunked or whole)
+        self.retraces = 0            # distinct (len, batch) bucket signatures
+        self.gaps: List[float] = []  # pooled inter-token intervals (jitter)
         self.run_id = uuid.uuid4().hex[:12]
 
     def now(self) -> float:
@@ -127,20 +132,35 @@ class Telemetry:
                           "arrival_step": arrival_step})
 
     def request_admitted(self, request_id: str, lane: int, n_pages: int,
-                         step: int) -> None:
+                         step: int, shared_pages: int = 0,
+                         chunks: int = 1) -> None:
         t = self.now()
         self.timelines[request_id].admitted_s = t
-        self.logger.emit({"ts": t, "event": "request_admitted",
-                          "request_id": request_id, "lane": lane,
-                          "n_pages": n_pages, "step": step})
+        line = {"ts": t, "event": "request_admitted",
+                "request_id": request_id, "lane": lane,
+                "n_pages": n_pages, "step": step}
+        if shared_pages or chunks > 1:
+            line["shared_pages"] = shared_pages
+            line["chunks"] = chunks
+        self.logger.emit(line)
+
+    def prefill_batch(self, step: int, bucket: int, batch: int) -> None:
+        """One bucketed prefill dispatch: ``batch`` rows padded to length
+        ``bucket`` ran through a single jitted call."""
+        self.logger.emit({"ts": self.now(), "event": "prefill_batch",
+                          "step": step, "bucket": bucket, "batch": batch})
 
     def first_token(self, request_id: str) -> None:
         tl = self.timelines[request_id]
-        tl.first_token_s = self.now()
+        tl.first_token_s = tl.last_token_s = self.now()
         tl.n_tokens = 1
 
     def token(self, request_id: str) -> None:
-        self.timelines[request_id].n_tokens += 1
+        tl = self.timelines[request_id]
+        t = self.now()
+        tl.n_tokens += 1
+        self.gaps.append(t - tl.last_token_s)
+        tl.last_token_s = t
 
     def request_finished(self, request_id: str, lane: int, step: int) -> None:
         tl = self.timelines[request_id]
@@ -166,21 +186,29 @@ class Telemetry:
         if not done:
             zero = {"p50": 0.0, "p99": 0.0, "mean": 0.0, "max": 0.0}
             return {"ttft": dict(zero), "tpot": dict(zero), "e2e": dict(zero)}
-        return {
+        out = {
             "ttft": summarize([tl.ttft_s for tl in done]),
             "tpot": summarize([tl.tpot_s for tl in done]),
             "e2e": summarize([tl.e2e_s for tl in done]),
         }
+        # per-request TPOT averages away intra-request stalls; the pooled
+        # inter-token intervals expose them (what chunked prefill shrinks)
+        if self.gaps:
+            out["gap"] = summarize(self.gaps)
+        return out
 
     def generated_tokens(self) -> int:
         return sum(tl.n_tokens for tl in self.timelines.values())
 
-    def run_summary(self, wall_s: float) -> Dict[str, Any]:
+    def run_summary(self, wall_s: float,
+                    extras: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
         toks = self.generated_tokens()
         line = {"ts": self.now(), "event": "run_summary",
                 "requests": len(self.timelines), "generated_tokens": toks,
                 "wall_s": wall_s,
                 "tokens_per_s": toks / wall_s if wall_s > 0 else 0.0}
+        if extras:
+            line.update(extras)
         self.logger.emit(line)
         return line
 
@@ -208,6 +236,9 @@ class Telemetry:
                 "wall_s": wall_s,
                 "steps": self.steps,
                 "prefills": self.prefills,
+                "prefill_batches": self.prefill_batches,
+                "prefill_chunks": self.chunks,
+                "retraces": self.retraces,
             },
             "artifacts": {"log": self.log_path or None},
             "status": status,

@@ -8,7 +8,8 @@ double-frees pages across arbitrary request arrival/finish sequences.
 import numpy as np
 import pytest
 
-from repro.serving.kv_pages import PageAllocator, SCRATCH_PAGE, flat_slots, needed_pages
+from repro.serving.kv_pages import (PageAllocator, PrefixCache, SCRATCH_PAGE,
+                                    flat_slots, needed_pages)
 from repro.serving.scheduler import ContinuousScheduler, ServeRequest
 
 
@@ -169,6 +170,170 @@ def test_allocator_property_hypothesis():
         _run_alloc_trace(num_pages, trace)
 
     prop()
+
+
+# ---------------------------------------------------------------------------
+# allocator: copy-on-write refcounts
+# ---------------------------------------------------------------------------
+
+
+def test_shared_page_freed_only_at_last_ref():
+    alloc = PageAllocator(8, reserved=1)
+    a, b, cache = "reqA", "reqB", "cache"
+    pages = alloc.alloc(3, a)
+    alloc.share(pages[:2], b)
+    alloc.share(pages[:1], cache)
+    assert [alloc.refcount(p) for p in pages] == [3, 2, 1]
+    alloc.release(pages, a)                 # b/cache refs keep pages 0 and 1
+    assert alloc.free_pages == alloc.capacity - 2
+    with pytest.raises(ValueError):
+        alloc.release(pages, a)             # a's refs are already gone
+    alloc.release(pages[:2], b)
+    assert alloc.free_pages == alloc.capacity - 1
+    alloc.release(pages[:1], cache)
+    alloc.check_consistent()
+    assert alloc.free_pages == alloc.capacity
+
+
+def test_share_free_page_raises_without_mutation():
+    alloc = PageAllocator(8, reserved=1)
+    pages = alloc.alloc(2, "req")
+    free_page = next(p for p in range(1, 8) if p not in pages)
+    with pytest.raises(ValueError):
+        alloc.share(pages + [free_page], "other")
+    # all-or-nothing: the valid pages gained no partial ref
+    assert [alloc.refcount(p) for p in pages] == [1, 1]
+    alloc.check_consistent()
+
+
+def _run_share_trace(num_pages, trace):
+    """trace: ('alloc', n) / ('share', idx) / ('release', idx).  Mirrors the
+    allocator against a host-side refcount model, checked after every op;
+    releasing an owner's refs twice must raise and change nothing."""
+    alloc = PageAllocator(num_pages, reserved=1)
+    holders = []                    # (pages, owner) — one ref per entry
+    model = {}                      # page -> expected refcount
+    serial = 0
+    for op, arg in trace:
+        if op == "alloc":
+            owner = ("own", serial)
+            serial += 1
+            pages = alloc.alloc(arg, owner)
+            if pages is None:
+                assert arg > alloc.capacity - len(model)
+            else:
+                assert len(pages) == arg and not set(pages) & set(model)
+                holders.append((pages, owner))
+                for p in pages:
+                    model[p] = 1
+        elif op == "share" and holders:
+            src_pages, _ = holders[arg % len(holders)]
+            take = src_pages[:1 + arg % max(1, len(src_pages))]
+            owner = ("share", serial)
+            serial += 1
+            alloc.share(take, owner)
+            holders.append((take, owner))
+            for p in take:
+                model[p] += 1
+        elif op == "release" and holders:
+            pages, owner = holders.pop(arg % len(holders))
+            alloc.release(pages, owner)
+            if pages:
+                with pytest.raises(ValueError):
+                    alloc.release(pages, owner)
+            for p in pages:
+                model[p] -= 1
+                assert model[p] >= 0
+                if model[p] == 0:
+                    del model[p]
+        for p, n in model.items():
+            assert alloc.refcount(p) == n
+        assert alloc.free_pages == alloc.capacity - len(model)
+        alloc.check_consistent()
+    for pages, owner in holders:
+        alloc.release(pages, owner)
+    alloc.check_consistent()
+    assert alloc.free_pages == alloc.capacity
+
+
+def test_allocator_cow_never_leaks_random_sequences():
+    rng = np.random.default_rng(11)
+    kinds = ["alloc", "share", "release"]
+    for _ in range(50):
+        trace = [(kinds[int(rng.integers(3))], int(rng.integers(0, 9)))
+                 for _ in range(60)]
+        _run_share_trace(int(rng.integers(4, 33)), trace)
+
+
+def test_allocator_cow_property_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    ops = st.lists(st.tuples(st.sampled_from(["alloc", "share", "release"]),
+                             st.integers(0, 8)), max_size=80)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(3, 40), ops)
+    def prop(num_pages, trace):
+        _run_share_trace(num_pages, trace)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# prefix cache + prefix-aware submit budgeting
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_publish_probe_release_cycle():
+    alloc = PageAllocator(16, reserved=1)
+    cache = PrefixCache(alloc, page_size=4)
+    prompt = np.arange(13, dtype=np.int32)          # 3 full pages + tail
+    pages = alloc.alloc(4, "pub")
+    assert cache.publish(prompt, pages, 3) == 3
+    assert cache.probe(prompt, 3) == pages[:3]
+    # chained keys commit to *prefixes*: diverging page 2 stops the run
+    fork = prompt.copy()
+    fork[9] += 1
+    assert cache.probe(fork, 3) == pages[:2]
+    got = cache.acquire(prompt, 3, "holder")
+    assert got == pages[:3]
+    alloc.release(pages, "pub")                     # publisher finishes...
+    assert [alloc.refcount(p) for p in pages[:3]] == [2, 2, 2]  # cache+holder
+    alloc.release(got, "holder")
+    cache.clear()                                   # cascades + drops cache refs
+    assert len(cache) == 0
+    cache.check_consistent()
+    alloc.check_consistent()
+    assert alloc.free_pages == alloc.capacity
+
+
+def test_submit_budgets_prefix_shared_pages():
+    """A request whose *full* footprint exceeds the pool must still be
+    accepted when cached prefix pages cover the overshoot, and rejections
+    must name the prefix-shared page count."""
+    alloc = PageAllocator(8, reserved=1)            # 7 usable pages
+    cache = PrefixCache(alloc, page_size=4)
+    sched = ContinuousScheduler(2, alloc, page_size=4, table_width=16,
+                                prefix_cache=cache)
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(0, 100, size=16).astype(np.int32)
+    pub = ServeRequest("pub", prompt, max_new_tokens=4)
+    sched.submit(pub)
+    [adm] = sched.admit(0)
+    sched.publish_prefix(pub)                       # 4 prompt pages cached
+    sched.release(adm.lane)
+    # 32 tokens -> 8 pages > 7-page pool, but 3 leading pages probe shared
+    sched.submit(ServeRequest("big", prompt, max_new_tokens=16))
+    assert sched.n_waiting == 1
+    # same size, cold prompt: rejected, message names the zero share count
+    with pytest.raises(ValueError, match=r"needs 8 pages \(0 prefix-shared\), "
+                                         r"pool has 7"):
+        sched.submit(ServeRequest("cold", prompt[::-1].copy(),
+                                  max_new_tokens=16))
+    # shared prefix but a tail the pool can never hold
+    with pytest.raises(ValueError, match=r"needs 11 pages \(3 prefix-shared\)"):
+        sched.submit(ServeRequest("huge", prompt, max_new_tokens=28))
 
 
 def test_needed_pages():

@@ -11,23 +11,26 @@ import pytest
 
 from repro.configs import get_config
 from repro.models.lm import LM
-from repro.serving import EngineConfig, FeedBuilder, ServeEngine, sample_greedy
+from repro.serving import (EngineConfig, FeedBuilder, ServeEngine, lane_keys,
+                           sample_greedy, sample_topk)
 from repro.launch.serve import build_workload, run_fixed
 
 
 def _serve_both(arch, requests=4, prompt_len=6, gen=4, gen_spread=0,
-                lanes=2, page_size=4):
+                lanes=2, page_size=4, prefix_len=0, extra_pages=0,
+                **engine_kw):
     cfg = get_config(arch, smoke=True)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
     workload = build_workload(cfg, requests, prompt_len, gen,
-                              gen_spread=gen_spread)
+                              gen_spread=gen_spread, prefix_len=prefix_len)
     fixed = run_fixed(model, params, [r.clone() for r in workload],
                       batch=requests)
     max_len = prompt_len + max(r.max_new_tokens for r in workload)
     tw = -(-max_len // page_size)
     ecfg = EngineConfig(lanes=lanes, page_size=page_size,
-                        num_pages=lanes * tw + 1, max_len=max_len)
+                        num_pages=lanes * tw + 1 + extra_pages,
+                        max_len=max_len, **engine_kw)
     engine = ServeEngine(model, params, ecfg)
     cont, _ = engine.run(workload)
     return fixed, cont
@@ -61,6 +64,49 @@ def test_continuous_matches_fixed_other_families(arch):
     _assert_identical(*_serve_both(arch))
 
 
+DECODER_ARCHS = ["qwen2-0.5b", "qwen3-14b", "gemma3-4b", "minicpm3-4b",
+                 "mixtral-8x7b", "deepseek-v2-236b", "mamba2-2.7b",
+                 "recurrentgemma-9b", "qwen2-vl-2b"]
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_continuous_matches_fixed_sharing_and_chunking(arch):
+    """Every decoder-only arch, with CoW prefix sharing and chunked prefill
+    requested: the engine gates each feature to the families where it is
+    exact, and the token stream must stay identical to the lockstep
+    reference either way."""
+    fixed, cont = _serve_both(arch, requests=5, prompt_len=10, gen=4,
+                              gen_spread=2, lanes=2, page_size=4,
+                              prefix_len=8, extra_pages=4,
+                              prefill_chunk=8, prefix_share=True)
+    _assert_identical(fixed, cont)
+
+
+def test_prefill_signature_count_bounded():
+    """32 prompts of every length 1..32 admitted one per step must lower to
+    at most log2(max_len) distinct (len bucket, batch, span) signatures —
+    the retrace-collapse property of bucketed batched prefill."""
+    import math
+
+    from repro.serving import ServeRequest
+
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(7)
+    reqs = [ServeRequest(request_id=f"r{n:02d}",
+                         prompt=rng.randint(0, cfg.vocab, size=n).astype(np.int32),
+                         max_new_tokens=2, arrival_step=n - 1)
+            for n in range(1, 33)]
+    max_len = 64
+    tw = -(-max_len // 4)
+    ecfg = EngineConfig(lanes=2, page_size=4, num_pages=2 * tw + 1,
+                        max_len=max_len)
+    engine = ServeEngine(model, params, ecfg)
+    engine.run(reqs)
+    assert len(engine.prefill_signatures) <= math.log2(max_len)
+
+
 def test_engine_rejects_encdec():
     cfg = get_config("seamless-m4t-large-v2", smoke=True)
     model = LM(cfg)
@@ -82,6 +128,33 @@ def test_sample_greedy_last_position_argmax():
     assert tok.shape == (2, 1)
     assert tok.dtype == jnp.int32
     assert tok.tolist() == [[4], [2]]
+
+
+def test_sample_topk_zero_temperature_is_greedy():
+    logits = jnp.zeros((2, 2, 8)).at[0, -1, 3].set(5.0).at[1, -1, 6].set(5.0)
+    logits = logits.at[0, 0, 1].set(99.0)              # earlier position: junk
+    keys = lane_keys(jnp.array([0, 1]), jnp.array([0, 0]))
+    tok = sample_topk(logits, 0.0, 0, keys)
+    assert tok.shape == (2, 1)
+    assert tok.dtype == jnp.int32
+    assert tok.tolist() == [[3], [6]]
+
+
+def test_sample_topk_support_and_determinism():
+    # two near-equal leaders: k=2 must draw both, and never anything else
+    logits = jnp.tile(jnp.array([[[0.0, 5.0, 4.9, 3.0, -2.0]]]), (4, 1, 1))
+    seeds = jnp.arange(4)
+    draws = [sample_topk(logits, 1.5, 2, lane_keys(seeds, jnp.full((4,), p)))
+             for p in range(50)]
+    flat = np.asarray(jnp.concatenate(draws)).ravel().tolist()
+    assert set(flat) == {1, 2}
+    # same (seed, position) keys replay the same tokens
+    again = sample_topk(logits, 1.5, 2, lane_keys(seeds, jnp.full((4,), 7)))
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(draws[7]))
+    # distinct seeds are distinct streams: across 50 positions the four
+    # lanes cannot all be identical
+    per_lane = np.asarray(jnp.concatenate(draws, axis=1))  # (4, 50)
+    assert any(not np.array_equal(per_lane[0], per_lane[i]) for i in (1, 2, 3))
 
 
 def test_feed_builder_caches_frames_per_shape():
