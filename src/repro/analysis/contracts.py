@@ -175,7 +175,12 @@ def check_hlo(contract: GraphContract, hlo: str) -> ContractResult:
                         f"{comp.name}/{instr.name} [custom-call {target}]")
             elif instr.op == "while":
                 whiles += 1
-                if not TRIP_RE.search(instr.rest):
+                # a loop is "annotated" if XLA stamped known_trip_count OR
+                # the counted-loop structure lets hlo_cost derive the count
+                # (what the roofline pricer actually uses) — only loops the
+                # pricer would fall back to trip-1 on violate the contract
+                if not TRIP_RE.search(instr.rest) and \
+                        hlo_cost.derive_trip_count(instr, comp, comps) is None:
                     whiles_unannotated.append(f"{comp.name}/{instr.name}")
 
     cost = hlo_cost.analyze_hlo(hlo)

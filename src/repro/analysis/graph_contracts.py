@@ -262,6 +262,42 @@ def build_serve_step_lanes(mutant: Optional[str] = None) -> str:
                     mutant)
 
 
+def build_serve_step_lanes_gdc(mutant: Optional[str] = None) -> str:
+    """serve_step_lanes behind in-graph Global Drift Compensation: the
+    chunked signature reductions (counted ``lax.scan`` loops — the
+    trip-count rule prices them, not the trip-1 fallback), the per-matrix
+    alpha division and the correction multiply lower into ONE module with
+    the decode step."""
+    model, params, ecfg, paged, _ = _serve_setup()
+    from repro.core.paths import path_str
+    from repro.lifetime import gdc as lgdc
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    # every matrix-shaped leaf gets calibrated (the serve path calibrates
+    # exactly the analog leaves; the structure is identical)
+    sig0 = {path_str(kp): 1.0 for kp, leaf in flat
+            if getattr(leaf, "ndim", 0) >= 2}
+
+    def step_fn(params, last, cache, table, pos, live):
+        corrected = lgdc.correct_in_graph(params, sig0)
+        toks, cache = model.serve_step_lanes(corrected, last, cache, table,
+                                             pos, live)
+        if mutant == "host_transfer":
+            jax.debug.print("contract-mutation {t}", t=toks.sum())
+        if mutant == "f64":
+            cache = _mutate_f64(cache)
+        if mutant == "restack":
+            cache = _mutate_restack(cache)
+        return toks, cache, pos + 1
+
+    last = jnp.zeros((ecfg.lanes, 1), jnp.int32)
+    table = jnp.zeros((ecfg.lanes, ecfg.table_width), jnp.int32)
+    pos = jnp.zeros((ecfg.lanes,), jnp.int32)
+    live = jnp.ones((ecfg.lanes,), bool)
+    return _compile(step_fn, (params, last, paged, table, pos, live), (2,),
+                    mutant)
+
+
 def build_prefill_commit_batch(mutant: Optional[str] = None) -> str:
     """The PR-9 bucketed multi-lane prefill: 2 rows padded to a 16-token
     length bucket, masked in-graph, K/V scattered straight into the rows'
@@ -300,6 +336,7 @@ ENTRYPOINTS: Dict[str, Callable[[Optional[str]], str]] = {
     "begin_step": build_begin_step,
     "prefill_commit": build_prefill_commit,
     "serve_step_lanes": build_serve_step_lanes,
+    "serve_step_lanes_gdc": build_serve_step_lanes_gdc,
     "prefill_commit_batch": build_prefill_commit_batch,
 }
 
@@ -371,6 +408,18 @@ CONTRACTS: Dict[str, GraphContract] = {
         min_aliased=2,           # donated page pools
         max_copy_bytes=98304,    # measured 67584 (one KV pool)
         max_hbm_bytes=2.2e7,     # measured 15.2M
+    ),
+    "serve_step_lanes_gdc": GraphContract(
+        name="serve_step_lanes_gdc",
+        description="GDC-corrected decode step: chunked signature "
+                    "reductions (counted scans — every while carries or "
+                    "derives a trip count), in-graph alpha correction, "
+                    "then the same donated-cache decode guarantees",
+        allowed_dtypes=_SERVE_DTYPES,
+        max_restacks=2,          # RoPE rotate-half concats
+        min_aliased=2,           # donated page pools
+        max_copy_bytes=98304,    # measured 67584 (same KV-pool copy)
+        max_hbm_bytes=1.4e7,     # measured 9.3M (decode + signature sweep)
     ),
     "serve_step_lanes": GraphContract(
         name="serve_step_lanes",

@@ -101,13 +101,23 @@ def _tile_class_manifest(tree) -> Dict[str, Any]:
     return out
 
 
-def save(tree, directory: str, step: int, *, asynchronous: bool = False) -> Optional[threading.Thread]:
+def save(tree, directory: str, step: int, *, asynchronous: bool = False,
+         extra: Optional[Dict[str, Any]] = None) -> Optional[threading.Thread]:
     """Write a checkpoint. With asynchronous=True the device->host copy
-    happens immediately but file IO runs on a daemon thread."""
+    happens immediately but file IO runs on a daemon thread.
+
+    ``extra``: JSON-serializable keys merged into manifest.json (e.g. the
+    ``gdc_signatures`` t0 weight signatures ``repro.lifetime`` compares
+    against at serve time). Reserved layout keys cannot be overridden."""
     flat = _flatten(tree)
     host = {k: np.asarray(v) for k, v in flat.items() if v is not None}
     tile_groups = _tile_group_manifest(tree)
     tile_classes = _tile_class_manifest(tree)
+    reserved = {"step", "time", "layout", "arrays", "tile_groups",
+                "tile_classes"}
+    extra = dict(extra or {})
+    assert not (set(extra) & reserved), \
+        f"extra manifest keys collide with layout keys: {set(extra) & reserved}"
 
     def _write():
         # unique tmp dir: an async save and a final sync save of the same
@@ -122,6 +132,7 @@ def save(tree, directory: str, step: int, *, asynchronous: bool = False) -> Opti
             manifest["tile_groups"] = tile_groups
         if tile_classes:
             manifest["tile_classes"] = tile_classes
+        manifest.update(extra)
         chunk_idx, chunk, chunk_bytes = 0, {}, 0
 
         def flush():
@@ -172,6 +183,17 @@ def save(tree, directory: str, step: int, *, asynchronous: bool = False) -> Opti
         return t
     _write()
     return None
+
+
+def read_manifest(directory: str, step: Optional[int] = None) -> Dict[str, Any]:
+    """Load manifest.json of ``step`` (default: latest) — the cheap way to
+    read checkpoint metadata (stored plan, ``extra`` keys like the GDC t0
+    signatures) without touching any array chunk."""
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoints in {directory}"
+    with open(os.path.join(directory, f"step_{step:09d}", "manifest.json")) as f:
+        return json.load(f)
 
 
 def latest_step(directory: str) -> Optional[int]:

@@ -43,6 +43,26 @@ class DeviceConfig:
     ref_std: float = 0.0
     # exp-family curvature (only for kind == "exp")
     exp_kappa: float = 0.5
+    # --- lifetime (post-training) physics, consumed by repro.lifetime ---
+    # Conductance drift W(t) = W(t0) * (t/t0)^-nu (Rasch et al. HWA
+    # replications): nu is sampled per element ~ N(drift_nu, drift_nu_std^2),
+    # clipped to >= 0; drift_t0 is the reference instant (seconds after
+    # programming) the checkpointed state is defined at. All defaults are
+    # no-op values so pre-lifetime checkpoints and presets behave
+    # identically (the stored-keys-only policy compare relies on this).
+    drift_nu: float = 0.0
+    drift_nu_std: float = 0.0
+    drift_t0: float = 1.0
+    # Write-and-verify programming error: one write lands at
+    # w + N(0, sigma_p(w)^2) with the state-dependent
+    # sigma_p(w) = prog_noise + prog_noise_slope * |w|; each verify round
+    # reads back (read_noise-corrupted) and applies a corrective write
+    # whose own error is proportional to the correction magnitude.
+    prog_noise: float = 0.0
+    prog_noise_slope: float = 0.0
+    prog_rounds: int = 1
+    # Additive conductance read noise (weight units) on any post-t0 read.
+    read_noise: float = 0.0
 
     @property
     def num_states(self) -> float:
@@ -50,22 +70,32 @@ class DeviceConfig:
         return (self.tau_max + self.tau_min) / self.dw_min
 
 
-# AIHWKit-style presets from paper Table 3.
+# AIHWKit-style presets from paper Table 3, with per-preset lifetime
+# coefficients (drift exponent, programming/read noise) in the units of the
+# normalized weight range. ReRAM drift is weak relative to PCM (retention
+# loss dominated by filament relaxation); the PCM preset carries the
+# canonical nu ~ 0.06 of d-GST mushroom cells.
 PRESETS = {
     # HfO2-based ReRAM (Gong et al., 2022b): very few states (~4-5)
     "reram_hfo2": DeviceConfig(
         kind="softbounds", tau_min=1.0, tau_max=1.0, dw_min=0.4622,
         sigma_d2d=0.1, sigma_pm=0.7125, sigma_c2c=0.2174,
+        drift_nu=0.01, drift_nu_std=0.004, prog_noise=0.02,
+        prog_noise_slope=0.05, read_noise=0.01,
     ),
     # ReRamArrayOMPresetDevice (Gong et al., 2022b)
     "reram_om": DeviceConfig(
         kind="softbounds", tau_min=1.0, tau_max=1.0, dw_min=0.0949,
         sigma_d2d=0.1, sigma_pm=0.7829, sigma_c2c=0.4158,
+        drift_nu=0.01, drift_nu_std=0.004, prog_noise=0.01,
+        prog_noise_slope=0.04, read_noise=0.005,
     ),
     # High-precision device used for the ZS complexity study (Fig. 1)
     "softbounds_2000": DeviceConfig(
         kind="softbounds", tau_min=1.0, tau_max=1.0, dw_min=0.001,
         sigma_d2d=0.1, sigma_pm=0.3, sigma_c2c=0.05,
+        drift_nu=0.005, drift_nu_std=0.002, prog_noise=0.002,
+        prog_noise_slope=0.01, read_noise=0.002,
     ),
     # ECRAM-style preset (AIHWKit EcRamPresetDevice analogue): ~1000 states,
     # milder asymmetry than the ReRAM presets but nonzero write noise —
@@ -73,6 +103,19 @@ PRESETS = {
     "ecram": DeviceConfig(
         kind="softbounds", tau_min=1.0, tau_max=1.0, dw_min=0.002,
         sigma_d2d=0.1, sigma_pm=0.25, sigma_c2c=0.15,
+        drift_nu=0.002, drift_nu_std=0.001, prog_noise=0.004,
+        prog_noise_slope=0.02, read_noise=0.002,
+    ),
+    # Mushroom-cell d-GST PCM (Rasch et al. HWA replications, SNIPPETS.md
+    # snippets 1 and 3): the canonical drifting device GDC was built for —
+    # nu ~ 0.06 with wide d2d spread, strongly state-dependent programming
+    # error, t0 ~ 20 s after program-and-verify.
+    "pcm_gst": DeviceConfig(
+        kind="softbounds", tau_min=1.0, tau_max=1.0, dw_min=0.005,
+        sigma_d2d=0.1, sigma_pm=0.3, sigma_c2c=0.05,
+        drift_nu=0.06, drift_nu_std=0.02, drift_t0=20.0,
+        prog_noise=0.01, prog_noise_slope=0.07, prog_rounds=3,
+        read_noise=0.005,
     ),
     # Idealized symmetric device (digital-like reference)
     "ideal": DeviceConfig(

@@ -42,6 +42,22 @@ from repro.serving import (EngineConfig, FeedBuilder, ServeEngine,
                            ServeRequest, Telemetry, load_effective_params,
                            sample_greedy)
 
+# --age suffixes, in seconds (month = Julian year / 12)
+AGE_UNITS = {"s": 1.0, "min": 60.0, "h": 3600.0, "d": 86400.0,
+             "mo": 2629800.0, "yr": 31557600.0}
+
+
+def parse_age(text: str) -> float:
+    """'0', '90', '5min', '1h', '1d', '1mo', '1yr' -> seconds since the
+    checkpoint was programmed (t0)."""
+    import re
+
+    m = re.fullmatch(r"\s*([0-9]*\.?[0-9]+)\s*([a-z]*)\s*", str(text))
+    if not m or (m.group(2) and m.group(2) not in AGE_UNITS):
+        raise ValueError(
+            f"bad --age {text!r}: expected <number>[{'|'.join(AGE_UNITS)}]")
+    return float(m.group(1)) * AGE_UNITS.get(m.group(2) or "s")
+
 
 def build_workload(cfg, requests: int, prompt_len: int, gen: int, seed: int = 3,
                    gen_spread: int = 0, arrival_every: int = 0,
@@ -159,6 +175,13 @@ def main(argv=None) -> None:
                          "repro.launch.train checkpoint")
     ap.add_argument("--algorithm", default="erider",
                     help="plan of the checkpoint (see repro.launch.train)")
+    ap.add_argument("--age", default="0",
+                    help="serve the checkpoint aged this long past t0 "
+                         "(conductance drift + read noise): seconds or "
+                         "<n>{s,min,h,d,mo,yr}, e.g. --age 1yr")
+    ap.add_argument("--gdc", choices=("on", "off"), default="off",
+                    help="Global Drift Compensation against the manifest's "
+                         "t0 weight signatures")
     ap.add_argument("--log-json", default="", help="JSON log lines path")
     ap.add_argument("--manifest", default="", help="run manifest path")
     ap.add_argument("--dump-tokens", default="",
@@ -167,10 +190,21 @@ def main(argv=None) -> None:
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = LM(cfg)
+    age_s = parse_age(args.age)
+    gdc_on = args.gdc == "on"
+    lifetime = None
     if args.ckpt_dir:
-        params = load_effective_params(model, args.ckpt_dir, args.algorithm,
-                                       args.smoke)
+        params, report = load_effective_params(
+            model, args.ckpt_dir, args.algorithm, args.smoke,
+            age_s=age_s, gdc=gdc_on, with_report=True)
+        if age_s > 0 or gdc_on:
+            lifetime = report
+            print(f"[serve] lifetime: age={age_s:.0f}s gdc={args.gdc} "
+                  f"t0_signature={report['t0_signature']}")
     else:
+        if age_s > 0 or gdc_on:
+            raise SystemExit("--age/--gdc require --ckpt-dir (lifetime "
+                             "applies to deployed analog weights)")
         params = model.init(jax.random.PRNGKey(0))
 
     workload = build_workload(cfg, args.requests, args.prompt_len, args.gen,
@@ -205,7 +239,8 @@ def main(argv=None) -> None:
         engine = ServeEngine(model, params, ecfg, arch=cfg.name,
                              checkpoint={"restored": bool(args.ckpt_dir),
                                          "dir": args.ckpt_dir,
-                                         "algorithm": args.algorithm})
+                                         "algorithm": args.algorithm},
+                             lifetime=lifetime)
         results, summary = engine.run(workload)
         lat = engine.telemetry.latency_summary()
         print(f"[serve] continuous: {summary['generated_tokens']} tokens in "
@@ -225,7 +260,7 @@ def main(argv=None) -> None:
                         "table_width": 1},
                 checkpoint={"restored": bool(args.ckpt_dir),
                             "dir": args.ckpt_dir, "algorithm": args.algorithm},
-                wall_s=wall)
+                wall_s=wall, lifetime=lifetime)
         telemetry.close()
         print(f"[serve] fixed: {summary['generated_tokens']} tokens in "
               f"{summary['wall_s']:.2f}s -> {summary['tokens_per_s']:.1f} tok/s")

@@ -46,8 +46,14 @@ from repro.models.lm import LM
 
 
 def make_tile_cfg(algorithm: str, smoke: bool) -> TileConfig:
+    # device_w carries PCM-grade lifetime coefficients (drift_nu ~ 0.06,
+    # cf. the pcm_gst preset): checkpoints trained by this driver can be
+    # aged and drift-compensated by repro.lifetime / bench_lifetime.
     dev = DeviceConfig(kind="softbounds", dw_min=2e-4 if smoke else 1e-4,
-                       sigma_d2d=0.1, sigma_pm=0.3, sigma_c2c=0.05)
+                       sigma_d2d=0.1, sigma_pm=0.3, sigma_c2c=0.05,
+                       drift_nu=0.06, drift_nu_std=0.02, drift_t0=20.0,
+                       prog_noise=0.01, prog_noise_slope=0.07, prog_rounds=3,
+                       read_noise=0.005)
     dev_p = DeviceConfig(kind="softbounds", dw_min=2e-4 if smoke else 1e-4,
                          sigma_d2d=0.1, sigma_pm=0.3, sigma_c2c=0.05,
                          ref_mean=0.1, ref_std=0.1)
@@ -62,6 +68,31 @@ def make_tile_cfg(algorithm: str, smoke: bool) -> TileConfig:
 def make_plan(algorithm: str, smoke: bool) -> api.AnalogPlan:
     """CLI ``--algorithm`` value -> AnalogPlan (see api.plan_from_spec)."""
     return api.plan_from_spec(algorithm, lambda a: make_tile_cfg(a, smoke))
+
+
+def ckpt_extra(trainer, state) -> dict:
+    """Extra manifest keys for ``ckpt.save``: the GDC t0 signatures of the
+    effective analog weights (``repro.lifetime.gdc``). Serve-time Global
+    Drift Compensation divides these programming-time references by the
+    aged signatures to recover the per-matrix drift scale. Computed with
+    the exact jitted function the serve side re-runs, over the exact
+    merged tree it rebuilds, so an unaged restore reproduces every
+    signature bit-for-bit (the GDC t0 token-identity contract)."""
+    from repro.core.trainer import merge_effective
+    from repro.lifetime import gdc
+
+    tiles = state["tiles"]
+    if not hasattr(tiles, "index"):
+        return {}
+    paths = [p for g, ps in tiles.index
+             for p in ps
+             if not (tiles.policy(g) is not None and tiles.policy(g).is_digital)]
+    if not paths:
+        return {}
+    eff = merge_effective(state["params"], tiles, trainer.cfg.tile)
+    sig_fn = jax.jit(lambda t: gdc.signature_tree(t, tuple(sorted(paths))))
+    return {"gdc_signatures": {p: float(v)
+                               for p, v in sig_fn(eff).items()}}
 
 
 def main(argv=None) -> None:
@@ -132,17 +163,21 @@ def main(argv=None) -> None:
                   f"sp_err={m.get('tile/sp_err', -1):.4f} ema_s={monitor.ema:.3f}",
                   flush=True)
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-            pending = ckpt.save(state, args.ckpt_dir, step + 1, asynchronous=True)
+            pending = ckpt.save(state, args.ckpt_dir, step + 1,
+                                asynchronous=True,
+                                extra=ckpt_extra(trainer, state))
         if preempt.should_stop:
             print("[train] preemption signal — checkpointing and exiting")
             if args.ckpt_dir:
-                ckpt.save(state, args.ckpt_dir, step + 1)
+                ckpt.save(state, args.ckpt_dir, step + 1,
+                          extra=ckpt_extra(trainer, state))
             break
     prefetch.close()
     if args.ckpt_dir:
         if pending is not None:
             pending.join(timeout=60)
-        ckpt.save(state, args.ckpt_dir, int(np.asarray(state["step"])))
+        ckpt.save(state, args.ckpt_dir, int(np.asarray(state["step"])),
+                  extra=ckpt_extra(trainer, state))
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f, indent=2)

@@ -1,0 +1,27 @@
+"""Post-training lifetime of analog weights: drift, programming error, GDC.
+
+Training (core/, the paper's subject) ends with a checkpoint of tile state;
+*serving* that checkpoint means the effective weights live on physical
+conductances that decay over time.  This package models that deployment
+half of the story:
+
+  drift  — pure transforms over effective weights: ``program_weights``
+           (write-and-verify programming error at t0) and
+           ``apply_lifetime`` (conductance drift ``W(t) = W(t0) *
+           (t/t0)^-nu`` with per-element nu and read noise), both driven
+           by the per-preset lifetime coefficients on ``DeviceConfig``
+           and the stateless hash RNG (device-independent replay).
+  gdc    — Global Drift Compensation: a columnwise current-sum signature
+           of each weight matrix under a fixed reference input; the ratio
+           of the t0 signature (stored in the checkpoint manifest) to the
+           aged signature is the per-tile scale correction GDC applies at
+           load time.
+
+``serving.engine.load_effective_params`` composes the two: age the merged
+effective weights to ``t0 + age_s`` per-path under each stack's own device
+preset, then (optionally) undo the global scale with GDC.
+"""
+from .drift import (age_params, apply_lifetime, lifetime_cfg_map,  # noqa: F401
+                    path_key, program_weights)
+from .gdc import (GDC_CHUNKS, correct_params, drift_scale,  # noqa: F401
+                  signature_tree, weight_signature)

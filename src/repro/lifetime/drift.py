@@ -1,0 +1,166 @@
+"""Conductance drift + programming-error transforms over effective weights.
+
+Physics (Rasch et al. HWA replications — SNIPPETS.md snippets 1 and 3,
+generalized to any ``DeviceConfig`` preset per arXiv 2502.06309):
+
+  programming   one write lands at ``w + N(0, sigma_p(w)^2)`` with the
+                state-dependent ``sigma_p(w) = prog_noise +
+                prog_noise_slope * |w|``; write-and-verify re-reads the
+                cell (read-noise corrupted) and issues a corrective write
+                whose own error is proportional to the correction, so the
+                residual shrinks geometrically with ``prog_rounds``.
+
+  drift         ``W(t) = W(t0) * (t/t0)^-nu`` with a frozen per-element
+                exponent ``nu ~ N(drift_nu, drift_nu_std^2)`` clipped at 0
+                (sampled once per device, not per read).
+
+  read noise    additive ``N(0, read_noise^2)`` on any post-t0 read.
+
+All randomness comes from ``kernels.fastrng`` hash draws keyed by (seed,
+salt): bit-reproducible across devices/shardings, fused into the consumer
+(no materialized noise arrays), and — critically for the serve-time
+contract — *frozen per deployment*, so reading twice at the same ``t``
+returns the same array.
+
+Units: the additive noise coefficients are fractions of the device's
+conductance range. ``program_weights`` acts on tile-space weights (already
+conductance-range units — it clips at tau), so its coefficients apply
+directly. ``apply_lifetime`` acts on *model-space* effective weights (tile
+weight x digital scales), so its additive ``read_noise`` is converted per
+tensor by the amplitude ``amax(|w|)`` — the model-space value a full-range
+conductance represents. Drift itself is multiplicative and scale-free.
+
+``t == cfg.drift_t0`` is a bit-exact no-op by construction: the checkpoint
+records the *verified post-program state at t0* (programming error is
+what `program_weights` models for freshly written arrays, not something
+retroactively applied to trained state), and the drift/read-noise branch
+is bypassed entirely via ``jnp.where`` on the exact time match.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device import DeviceConfig
+from repro.core.paths import path_str
+from repro.kernels import fastrng
+
+# fastrng salt namespace: core/device.py owns 11/13/17, sampling owns its
+# own keyspace; lifetime draws live at 23+ so a (seed, salt) pair never
+# collides with d2d sampling on the same key.
+SALT_NU = 23          # per-element drift exponent (frozen per deployment)
+SALT_READ = 29        # read noise at age t (frozen per deployment)
+SALT_PROG = 31        # programming write error, round r -> SALT_PROG + 2r
+SALT_VERIFY = 37      # verify-read error, round r -> SALT_VERIFY + 2r
+
+
+def path_key(key, name: str):
+    """Deterministic per-path PRNG key (same CRC fold-in idiom as the
+    trainer's per-tile keys), so every weight matrix drifts independently
+    but reproducibly."""
+    return jax.random.fold_in(key, np.uint32(zlib.crc32(name.encode())))
+
+
+def has_lifetime(cfg: DeviceConfig) -> bool:
+    """True when the preset models any post-training non-ideality."""
+    return (cfg.drift_nu != 0.0 or cfg.drift_nu_std != 0.0
+            or cfg.read_noise != 0.0 or cfg.prog_noise != 0.0
+            or cfg.prog_noise_slope != 0.0)
+
+
+def apply_lifetime(w_eff, t, key, cfg: DeviceConfig):
+    """Read the effective weight array ``w_eff`` (programmed at
+    ``cfg.drift_t0``) at absolute time ``t`` seconds after programming.
+
+    Pure and jit-friendly (``t`` may be a traced scalar). Exactly
+    ``w_eff`` when ``t == cfg.drift_t0``; ``t`` is clamped below at t0
+    (drift is not defined before the reference read)."""
+    if not has_lifetime(cfg):
+        return w_eff
+    seed = fastrng.seed_from_key(key)
+    shape = w_eff.shape
+    nu = cfg.drift_nu + cfg.drift_nu_std * fastrng.hash_normal(seed, shape, SALT_NU)
+    nu = jnp.clip(nu, 0.0, None)
+    t = jnp.asarray(t, jnp.float32)
+    # (t/t0)^-nu via exp/log: one transcendental pair regardless of nu's
+    # per-element spread, and exactly 1.0 at t == t0 (log(1) == 0).
+    log_ratio = jnp.log(jnp.maximum(t, cfg.drift_t0) / cfg.drift_t0)
+    aged = w_eff * jnp.exp(-nu * log_ratio)
+    if cfg.read_noise:
+        # read_noise is a conductance-range fraction; w_eff is model-space
+        # -> convert by the tensor's amplitude (see module docstring)
+        unit = jnp.max(jnp.abs(w_eff))
+        aged = aged + cfg.read_noise * unit * fastrng.hash_normal(
+            seed, shape, SALT_READ)
+    return jnp.where(t == cfg.drift_t0, w_eff, aged).astype(w_eff.dtype)
+
+
+def program_weights(w_aim, key, cfg: DeviceConfig):
+    """Write-and-verify programming of target weights ``w_aim``: returns
+    the conductance state actually standing at ``cfg.drift_t0``.
+
+    Round 0 writes the full target with state-dependent error
+    ``sigma_p(w) = prog_noise + prog_noise_slope * |w|``; each subsequent
+    round reads back through ``read_noise`` and issues a corrective write
+    whose error is ``prog_noise_slope * |correction| + c2c floor`` — small
+    corrections are cheap to land, so the residual contracts geometrically
+    until it hits the read-noise floor (the classic iterative-programming
+    curve). ``prog_rounds == 1`` is the pure open-loop model the stats
+    tests regress against."""
+    if cfg.prog_noise == 0.0 and cfg.prog_noise_slope == 0.0:
+        return w_aim
+    seed = fastrng.seed_from_key(key)
+    shape = w_aim.shape
+    sigma0 = cfg.prog_noise + cfg.prog_noise_slope * jnp.abs(w_aim)
+    w = w_aim + sigma0 * fastrng.hash_normal(seed, shape, SALT_PROG)
+    floor = 0.1 * cfg.prog_noise
+    for r in range(1, max(int(cfg.prog_rounds), 1)):
+        read = w + cfg.read_noise * fastrng.hash_normal(
+            seed, shape, SALT_VERIFY + 2 * r)
+        delta = w_aim - read
+        sigma_c = floor + cfg.prog_noise_slope * jnp.abs(delta)
+        w = w + delta + sigma_c * fastrng.hash_normal(
+            seed, shape, SALT_PROG + 2 * r)
+    tau = min(cfg.tau_min, cfg.tau_max)
+    if cfg.kind == "softbounds" and tau > 0:
+        w = jnp.clip(w, -cfg.tau_min, cfg.tau_max)
+    return w.astype(w_aim.dtype)
+
+
+def lifetime_cfg_map(params, tiles, default_cfg: DeviceConfig) -> Dict[str, DeviceConfig]:
+    """{path: DeviceConfig} for every *analog* leaf of the merged effective
+    params: each TileBank member path maps to its own stack's resolved
+    ``device_w`` preset (the conductances that physically hold the weight);
+    digital leaves (norms, scalars) are absent — silicon does not drift."""
+    out: Dict[str, DeviceConfig] = {}
+    for g, paths in tiles.index:
+        pol = tiles.policy(g)
+        if pol is not None and pol.is_digital:
+            continue
+        cfg = pol.tile.device_w if pol is not None else default_cfg
+        for p in paths:
+            out[p] = cfg
+    return out
+
+
+def age_params(params, cfg_map: Dict[str, DeviceConfig], age_s: float, key):
+    """Age every analog leaf of a merged effective-params tree to
+    ``t = drift_t0 + age_s`` under its own device preset. Leaves without a
+    cfg_map entry pass through untouched. ``age_s == 0`` returns leaves
+    bit-exactly (the ``t == t0`` branch of ``apply_lifetime``)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: x is None)
+    out = []
+    for kp, leaf in flat:
+        p = path_str(kp)
+        cfg = cfg_map.get(p)
+        if leaf is None or cfg is None:
+            out.append(leaf)
+            continue
+        out.append(apply_lifetime(leaf, cfg.drift_t0 + float(age_s),
+                                  path_key(key, p), cfg))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -224,6 +224,119 @@ def _instr_cost(instr: Instr, types: Dict[str, str]) -> Cost:
     return c
 
 
+_INDEX_RE = re.compile(r"index=(\d+)")
+_DIRECTION_RE = re.compile(r"direction=(\w+)")
+_CONST_INT_RE = re.compile(r"^\s*(-?\d+)\s*\)")
+
+
+def _const_int(name: str, comp: Computation) -> Optional[int]:
+    """Integer value of a scalar constant instruction (following copies)."""
+    by_name = {i.name: i for i in comp.instrs}
+    seen = set()
+    while name in by_name and name not in seen:
+        seen.add(name)
+        instr = by_name[name]
+        if instr.op == "constant":
+            m = _CONST_INT_RE.match(instr.rest)
+            return int(m.group(1)) if m else None
+        if instr.op in ("copy", "bitcast", "convert"):
+            ops = _operand_names(instr.rest)
+            if not ops:
+                return None
+            name = ops[0]
+            continue
+        return None
+    return None
+
+
+def derive_trip_count(instr: Instr, comp: Computation,
+                      comps: Dict[str, Computation]) -> Optional[int]:
+    """Trip count of a canonical counted ``while`` loop, derived from its
+    condition/init/body when the ``known_trip_count`` backend_config is
+    absent (other XLA versions/backends strip or omit it).
+
+    The lowered form of ``lax.scan``/``fori_loop`` is:
+      condition ROOT:  compare(get-tuple-element(param, index=K), bound),
+                       direction=LT
+      init:            tuple element K is a scalar constant
+      body ROOT tuple: element K = add(get-tuple-element(.., index=K), step)
+    Returns ``ceil((bound - init) / step)`` or None when the loop does not
+    match (genuinely dynamic condition)."""
+    cond_m = _COND_RE.search(instr.rest)
+    body_m = _CALLS_RE.search(instr.rest)
+    if not cond_m or not body_m:
+        return None
+    cond = comps.get(cond_m.group(1))
+    body = comps.get(body_m.group(1))
+    if cond is None or body is None or not cond.instrs or not body.instrs:
+        return None
+    # --- condition: ROOT compare(counter, bound) direction=LT ---
+    root = cond.instrs[-1]
+    if root.op != "compare":
+        return None
+    dm = _DIRECTION_RE.search(root.rest)
+    if not dm or dm.group(1) != "LT":
+        return None
+    ops = _operand_names(root.rest)
+    if len(ops) < 2:
+        return None
+    cond_by_name = {i.name: i for i in cond.instrs}
+    gte = cond_by_name.get(ops[0])
+    if gte is None or gte.op != "get-tuple-element":
+        return None
+    km = _INDEX_RE.search(gte.rest)
+    if not km:
+        return None
+    k = int(km.group(1))
+    bound = _const_int(ops[1], cond)
+    if bound is None:
+        return None
+    # --- init: element K of the while's operand tuple ---
+    while_ops = _operand_names(instr.rest)
+    comp_by_name = {i.name: i for i in comp.instrs}
+    init_tuple = comp_by_name.get(while_ops[0]) if while_ops else None
+    seen = set()
+    while init_tuple is not None and init_tuple.op in ("copy", "bitcast") \
+            and init_tuple.name not in seen:
+        seen.add(init_tuple.name)
+        t_ops = _operand_names(init_tuple.rest)
+        init_tuple = comp_by_name.get(t_ops[0]) if t_ops else None
+    if init_tuple is None or init_tuple.op != "tuple":
+        return None
+    t_ops = _operand_names(init_tuple.rest)
+    if k >= len(t_ops):
+        return None
+    init = _const_int(t_ops[k], comp)
+    if init is None:
+        return None
+    # --- body: element K of the ROOT tuple is add(counter, step) ---
+    broot = body.instrs[-1]
+    if broot.op != "tuple":
+        return None
+    b_ops = _operand_names(broot.rest)
+    if k >= len(b_ops):
+        return None
+    body_by_name = {i.name: i for i in body.instrs}
+    upd = body_by_name.get(b_ops[k])
+    seen = set()
+    while upd is not None and upd.op in ("copy", "bitcast") \
+            and upd.name not in seen:
+        seen.add(upd.name)
+        u_ops = _operand_names(upd.rest)
+        upd = body_by_name.get(u_ops[0]) if u_ops else None
+    if upd is None or upd.op != "add":
+        return None
+    step = None
+    for o in _operand_names(upd.rest):
+        v = _const_int(o, body)
+        if v is not None:
+            step = v
+            break
+    if not step or step <= 0 or bound <= init:
+        return None
+    return -(-(bound - init) // step)
+
+
 def analyze_hlo(hlo: str) -> Cost:
     comps = parse_module(hlo)
     memo: Dict[str, Cost] = {}
@@ -242,14 +355,20 @@ def analyze_hlo(hlo: str) -> Cost:
                 if m:
                     trips = int(m.group(1))
                 else:
-                    # dynamic-condition loops carry no known_trip_count;
-                    # price the body once rather than silently dropping it,
-                    # and say so — a mispriced loop poisons the roofline
+                    # no known_trip_count annotation (stripped or absent on
+                    # this backend): derive it from the canonical counted-
+                    # loop structure before giving up
+                    trips = derive_trip_count(instr, comp, comps)
+                if trips is None:
+                    # genuinely dynamic-condition loop; price the body once
+                    # rather than silently dropping it, and say so — a
+                    # mispriced loop poisons the roofline
                     trips = 1
                     warnings.warn(
                         f"while loop '{instr.name}' (in computation "
-                        f"'{comp.name}') has no known_trip_count annotation; "
-                        "pricing its body with trip count 1",
+                        f"'{comp.name}') has no known_trip_count annotation "
+                        "and no derivable counted-loop structure; pricing "
+                        "its body with trip count 1",
                         RuntimeWarning, stacklevel=2)
                 body = _CALLS_RE.search(instr.rest)
                 cond = _COND_RE.search(instr.rest)

@@ -62,14 +62,44 @@ class EngineConfig:
         return needed_pages(self.max_len, self.page_size)
 
 
-def load_effective_params(model, ckpt_dir: str, algorithm: str, smoke: bool):
+# the per-deployment lifetime RNG: drift exponents / read noise are frozen
+# physical facts of one programmed array, so the key is a constant — two
+# loads of the same checkpoint at the same age see the same conductances
+_LIFETIME_KEY_SEED = 0xD81F7
+
+
+def _drift_scale_summary(tiles, scales: Dict[str, float]) -> Dict[str, Dict[str, float]]:
+    """Per-scan-class min/mean/max of the per-matrix GDC scales — the
+    compact form the serve manifest records."""
+    pidx = dict(tiles.index)
+    out: Dict[str, Dict[str, float]] = {}
+    for cname, gnames in tiles.class_index:
+        vals = [scales[p] for g in gnames for p in pidx[g] if p in scales]
+        if vals:
+            out[cname] = {"min": min(vals), "mean": sum(vals) / len(vals),
+                          "max": max(vals)}
+    return out
+
+
+def load_effective_params(model, ckpt_dir: str, algorithm: str, smoke: bool,
+                          *, age_s: float = 0.0, gdc: bool = False,
+                          with_report: bool = False):
     """Rebuild the training-time plan, restore the checkpoint through the
     (re-keying) elastic restore path, and merge effective analog weights.
 
     The restore template is built with ``abstract_state`` from
     ``eval_shape``'d params — no throwaway tile/optimizer state is ever
     materialized (at LM scale trainer.init would allocate several times
-    the served weights just to be overwritten)."""
+    the served weights just to be overwritten).
+
+    Lifetime (``repro.lifetime``): ``age_s`` ages every analog leaf to
+    ``drift_t0 + age_s`` under its own stack's ``device_w`` preset
+    (conductance drift + read noise; ``age_s == 0`` is bit-exact);
+    ``gdc=True`` then applies Global Drift Compensation against the t0
+    signatures stored in the checkpoint manifest (recomputed from the
+    unaged restore when the checkpoint predates them). With
+    ``with_report=True`` returns ``(params, report)`` where ``report`` is
+    the manifest-shaped lifetime block."""
     from repro.checkpoint import ckpt
     from repro.core.digital_opt import DigitalOptConfig, ScheduleConfig
     from repro.core.trainer import AnalogTrainer, TrainerConfig, merge_effective
@@ -86,7 +116,40 @@ def load_effective_params(model, ckpt_dir: str, algorithm: str, smoke: bool):
     state = ckpt.restore(template, ckpt_dir)
     print(f"[serve] restored step {int(np.asarray(state['step']))} from "
           f"{ckpt_dir} | {trainer.describe_plan(aparams)}", flush=True)
-    return merge_effective(state["params"], state["tiles"], trainer.cfg.tile)
+    params = merge_effective(state["params"], state["tiles"], trainer.cfg.tile)
+    report: Dict[str, Any] = {"age_s": float(age_s), "gdc": bool(gdc),
+                              "t0_signature": "none", "drift_scale": {}}
+    if age_s > 0.0 or gdc:
+        from repro.lifetime import drift as ldrift
+        from repro.lifetime import gdc as lgdc
+
+        tiles = state["tiles"]
+        cfg_map = ldrift.lifetime_cfg_map(params, tiles,
+                                          trainer.cfg.tile.device_w)
+        sig0 = None
+        if gdc:
+            manifest = ckpt.read_manifest(ckpt_dir)
+            sig0 = manifest.get("gdc_signatures")
+            report["t0_signature"] = "checkpoint"
+            if sig0:
+                sig0 = {p: v for p, v in sig0.items() if p in cfg_map}
+            if not sig0:
+                # pre-lifetime checkpoint: the unaged restore IS the t0
+                # state, so its signatures are the reference
+                report["t0_signature"] = "recomputed"
+                sig_fn = jax.jit(lambda t: lgdc.signature_tree(
+                    t, tuple(sorted(cfg_map))))
+                sig0 = {p: float(v) for p, v in sig_fn(params).items()}
+        if age_s > 0.0:
+            params = ldrift.age_params(
+                params, cfg_map, age_s,
+                jax.random.PRNGKey(_LIFETIME_KEY_SEED))
+        if gdc:
+            params, scales = lgdc.correct_params(params, sig0)
+            report["drift_scale"] = _drift_scale_summary(tiles, scales)
+    if with_report:
+        return params, report
+    return params
 
 
 def _pow2_ceil(n: int) -> int:
@@ -115,7 +178,8 @@ class _Segment:
 class ServeEngine:
     def __init__(self, model, params, ecfg: EngineConfig,
                  telemetry: Optional[Telemetry] = None, arch: str = "",
-                 checkpoint: Optional[Dict[str, Any]] = None):
+                 checkpoint: Optional[Dict[str, Any]] = None,
+                 lifetime: Optional[Dict[str, Any]] = None):
         if model.cfg.is_encdec:
             raise NotImplementedError(
                 "continuous batching supports decoder-only models; use the "
@@ -125,6 +189,7 @@ class ServeEngine:
         self.ecfg = ecfg
         self.arch = arch or model.cfg.name
         self.checkpoint = checkpoint or {"restored": False, "dir": "", "algorithm": ""}
+        self.lifetime = lifetime          # load_effective_params report
         self.telemetry = telemetry or Telemetry(log_path=ecfg.log_path)
 
         # per-family capability gates (all off -> exact-length fresh batches)
@@ -423,6 +488,6 @@ class ServeEngine:
             manifest = self.telemetry.write_manifest(
                 self.ecfg.manifest_path, arch=self.arch,
                 engine=self.manifest_meta(), checkpoint=self.checkpoint,
-                wall_s=wall_s, status=status)
+                wall_s=wall_s, status=status, lifetime=self.lifetime)
         self.telemetry.close()
         return manifest

@@ -249,6 +249,32 @@ MANIFEST_SCHEMA = {
             "properties": {"log": {"type": ["string", "null"]}},
         },
         "status": {"enum": ["completed", "aborted"]},
+        # optional (absent pre-lifetime): present only when the served
+        # weights went through repro.lifetime (aged and/or GDC-corrected)
+        "lifetime": {
+            "type": "object", "additionalProperties": False,
+            "required": ["age_s", "gdc", "t0_signature", "drift_scale"],
+            "properties": {
+                "age_s": _nonneg_number,
+                "gdc": {"type": "boolean"},
+                # where the t0 reference came from: stored by the training
+                # driver, recomputed from an unaged restore, or GDC off
+                "t0_signature": {"enum": ["checkpoint", "recomputed", "none"]},
+                # per-scan-class summary of the per-matrix GDC scales
+                "drift_scale": {
+                    "type": "object",
+                    "additionalProperties": {
+                        "type": "object", "additionalProperties": False,
+                        "required": ["min", "mean", "max"],
+                        "properties": {
+                            "min": _nonneg_number,
+                            "mean": _nonneg_number,
+                            "max": _nonneg_number,
+                        },
+                    },
+                },
+            },
+        },
     },
 }
 

@@ -215,7 +215,8 @@ class Telemetry:
     # ----------------------------------------------------------- manifest
     def build_manifest(self, *, arch: str, engine: Dict[str, Any],
                        checkpoint: Dict[str, Any], wall_s: float,
-                       status: str = "completed") -> Dict[str, Any]:
+                       status: str = "completed",
+                       lifetime: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
         toks = self.generated_tokens()
         manifest = {
             "schema_version": schema.SCHEMA_VERSION,
@@ -243,6 +244,9 @@ class Telemetry:
             "artifacts": {"log": self.log_path or None},
             "status": status,
         }
+        if lifetime is not None:
+            # load_effective_params' report: age, GDC state, drift scales
+            manifest["lifetime"] = lifetime
         schema.validate_manifest(manifest)
         return manifest
 

@@ -15,7 +15,16 @@ from repro.serving import schema
 from repro.serving.telemetry import Telemetry
 
 
-def _mini_manifest(tmp_path, log_path=""):
+_LIFETIME = {
+    "age_s": 31557600.0,
+    "gdc": True,
+    "t0_signature": "checkpoint",
+    "drift_scale": {"attn.qkv": {"min": 1.9, "mean": 2.1, "max": 2.4},
+                    "mlp.up": {"min": 2.0, "mean": 2.2, "max": 2.3}},
+}
+
+
+def _mini_manifest(tmp_path, log_path="", lifetime=None):
     tel = Telemetry(log_path=log_path)
     tel.request_submitted("r0", 8, 3)
     tel.request_admitted("r0", 0, 1, step=0)
@@ -30,7 +39,7 @@ def _mini_manifest(tmp_path, log_path=""):
         engine={"mode": "continuous", "lanes": 2, "page_size": 4,
                 "num_pages": 9, "table_width": 4},
         checkpoint={"restored": False, "dir": "", "algorithm": ""},
-        wall_s=0.25)
+        wall_s=0.25, lifetime=lifetime)
     tel.close()
     return path, manifest
 
@@ -67,6 +76,42 @@ def test_manifest_records_log_artifact(tmp_path):
 ])
 def test_tampered_manifest_fails(tmp_path, mutate, msg):
     _, manifest = _mini_manifest(tmp_path)
+    bad = copy.deepcopy(manifest)
+    mutate(bad)
+    with pytest.raises(schema.SchemaError, match=msg):
+        schema.validate_manifest(bad)
+
+
+def test_manifest_lifetime_block_valid(tmp_path):
+    """An aged/GDC-corrected serve run records its lifetime provenance."""
+    import copy as _copy
+    path, manifest = _mini_manifest(tmp_path, lifetime=_copy.deepcopy(_LIFETIME))
+    on_disk = json.loads(path.read_text())
+    assert on_disk == manifest
+    schema.validate_manifest(on_disk)
+    assert on_disk["lifetime"]["age_s"] == 31557600.0
+    assert on_disk["lifetime"]["t0_signature"] == "checkpoint"
+    # absent block stays absent (pre-lifetime manifests unchanged)
+    _, plain = _mini_manifest(tmp_path)
+    assert "lifetime" not in plain
+
+
+@pytest.mark.parametrize("mutate, msg", [
+    (lambda m: m["lifetime"].pop("age_s"), "missing required key"),
+    (lambda m: m["lifetime"].pop("drift_scale"), "missing required key"),
+    (lambda m: m["lifetime"].__setitem__("age_s", -1.0), "minimum"),
+    (lambda m: m["lifetime"].__setitem__("gdc", "yes"), "is not"),
+    (lambda m: m["lifetime"].__setitem__("t0_signature", "guessed"), "not in"),
+    (lambda m: m["lifetime"].__setitem__("extra", 1), "unexpected key"),
+    (lambda m: m["lifetime"]["drift_scale"]["attn.qkv"].pop("mean"),
+     "missing required key"),
+    (lambda m: m["lifetime"]["drift_scale"]["attn.qkv"].__setitem__(
+        "min", -0.1), "minimum"),
+    (lambda m: m["lifetime"]["drift_scale"]["attn.qkv"].__setitem__(
+        "p50", 2.0), "unexpected key"),
+])
+def test_tampered_lifetime_block_fails(tmp_path, mutate, msg):
+    _, manifest = _mini_manifest(tmp_path, lifetime=copy.deepcopy(_LIFETIME))
     bad = copy.deepcopy(manifest)
     mutate(bad)
     with pytest.raises(schema.SchemaError, match=msg):

@@ -178,3 +178,90 @@ def test_unannotated_while_warns_and_prices_once():
     with pytest.warns(RuntimeWarning, match="known_trip_count"):
         cost = hlo_cost.analyze_hlo(_while_hlo(""))
     assert cost.bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# counted-loop derivation: trips recovered without a known_trip_count annot
+# ---------------------------------------------------------------------------
+
+def _counted_while_hlo(init: int, bound: int, step: int,
+                       annot: str = "") -> str:
+    """Canonical lax.fori_loop lowering: counter in tuple slot 0, constant
+    init/bound/step — what derive_trip_count must recover."""
+    return f"""\
+HloModule cw
+
+%body (bs: (s32[], f32[64])) -> (s32[], f32[64]) {{
+  %bs = (s32[], f32[64]) parameter(0)
+  %g = f32[64]{{0}} get-tuple-element((s32[], f32[64]) %bs), index=1
+  %h = f32[64]{{0}} add(f32[64]{{0}} %g, f32[64]{{0}} %g)
+  %i = s32[] get-tuple-element((s32[], f32[64]) %bs), index=0
+  %step = s32[] constant({step})
+  %ip = s32[] add(s32[] %i, s32[] %step)
+  ROOT %bt = (s32[], f32[64]) tuple(s32[] %ip, f32[64]{{0}} %h)
+}}
+
+%cond (cs: (s32[], f32[64])) -> pred[] {{
+  %cs = (s32[], f32[64]) parameter(0)
+  %ci = s32[] get-tuple-element((s32[], f32[64]) %cs), index=0
+  %lim = s32[] constant({bound})
+  ROOT %lt = pred[] compare(s32[] %ci, s32[] %lim), direction=LT
+}}
+
+ENTRY %main (p: f32[64]) -> (s32[], f32[64]) {{
+  %p = f32[64]{{0}} parameter(0)
+  %c0 = s32[] constant({init})
+  %t = (s32[], f32[64]) tuple(s32[] %c0, f32[64]{{0}} %p)
+  ROOT %w = (s32[], f32[64]) while((s32[], f32[64]) %t), condition=%cond, body=%body{annot}
+}}
+"""
+
+
+def test_counted_loop_derived_without_annotation():
+    """A structurally counted loop prices exactly like the same loop with
+    the explicit annotation — and emits no RuntimeWarning."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        derived = hlo_cost.analyze_hlo(_counted_while_hlo(0, 10, 1))
+    annotated = hlo_cost.analyze_hlo(_counted_while_hlo(
+        0, 10, 1, annot=', backend_config={"known_trip_count":{"n":"10"}}'))
+    assert derived.bytes == annotated.bytes
+    assert derived.flops == annotated.flops
+
+
+@pytest.mark.parametrize("init, bound, step, trips", [
+    (0, 10, 1, 10),
+    (0, 10, 3, 4),     # ceil((10-0)/3)
+    (2, 10, 2, 4),
+    (5, 5, 1, None),   # bound already reached: decline, don't price 0
+])
+def test_derive_trip_count_arithmetic(init, bound, step, trips):
+    comps = hlo_cost.parse_module(_counted_while_hlo(init, bound, step))
+    entry = next(c for c in comps.values() if "%main" in c.name
+                 or c.name.endswith("main"))
+    w = next(i for i in entry.instrs if i.op == "while")
+    assert hlo_cost.derive_trip_count(w, entry, comps) == trips
+
+
+def test_derive_trip_count_rejects_dynamic_loop():
+    """The original fixture never advances its counter: not a counted
+    loop, so the derivation must decline (and pricing falls back to the
+    warned trip-1 path)."""
+    comps = hlo_cost.parse_module(_while_hlo(""))
+    entry = next(c for c in comps.values() if "main" in c.name)
+    w = next(i for i in entry.instrs if i.op == "while")
+    assert hlo_cost.derive_trip_count(w, entry, comps) is None
+
+
+def test_contract_accepts_derived_counted_loop():
+    """The graph-contract trip-count rule accepts a derivable loop and
+    still rejects a genuinely dynamic one."""
+    from repro.analysis.contracts import GraphContract, check_hlo
+
+    contract = GraphContract(name="t", require_donation=False)
+    ok = check_hlo(contract, _counted_while_hlo(0, 4, 1))
+    assert not [v for v in ok.violations if v["rule"] == "trip-count"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        bad = check_hlo(contract, _while_hlo(""))
+    assert [v for v in bad.violations if v["rule"] == "trip-count"]

@@ -1,0 +1,221 @@
+"""Lifetime subsystem: drift statistics, programming-error model, GDC
+math, and the serve-time t0 identity contracts.
+
+The statistical tests regress *recovered* physics against the configured
+coefficients (drift exponent by log-log regression over six decades;
+programming error by the state-dependent sigma model) rather than golden
+arrays — the hash-RNG layout may change salt order without changing the
+model.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.device import DeviceConfig, PRESETS
+from repro.lifetime import (age_params, apply_lifetime, correct_params,
+                            lifetime_cfg_map, path_key, program_weights,
+                            signature_tree, weight_signature)
+from repro.lifetime import drift as ldrift
+from repro.lifetime import gdc as lgdc
+
+PCM = PRESETS["pcm_gst"]
+KEY = jax.random.PRNGKey(7)
+
+
+# --------------------------------------------------------------- drift law
+
+
+def test_drift_exponent_recovered_by_regression():
+    """Mean decay over 6 decades regresses to nu within the d2d spread."""
+    cfg = DeviceConfig(kind="softbounds", drift_nu=0.06, drift_nu_std=0.02,
+                       drift_t0=20.0)
+    w = jnp.ones((256, 256), jnp.float32)
+    ts = np.array([cfg.drift_t0 * 10.0 ** k for k in range(7)])
+    means = np.array([float(jnp.mean(apply_lifetime(w, t, KEY, cfg)))
+                      for t in ts])
+    # W(t)/W(t0) = exp(-nu log r): slope of log(mean) vs log(t/t0) = -nu_eff
+    x = np.log(ts / cfg.drift_t0)
+    slope = np.polyfit(x[1:], np.log(means[1:]), 1)[0]
+    # E[exp(-nu L)] has a positive Jensen correction ~ nu_std^2 L / 2, so
+    # the recovered exponent sits slightly below drift_nu
+    assert -slope == pytest.approx(cfg.drift_nu, abs=0.015)
+
+
+def test_drift_t0_is_bit_exact_noop():
+    w = jax.random.normal(KEY, (64, 48), jnp.float32)
+    out = apply_lifetime(w, PCM.drift_t0, KEY, PCM)
+    assert np.array_equal(np.asarray(out), np.asarray(w))
+
+
+def test_drift_monotone_and_clamped_below_t0():
+    cfg = DeviceConfig(kind="softbounds", drift_nu=0.06, drift_t0=20.0)
+    w = jnp.ones((128, 128), jnp.float32)
+    ms = [float(jnp.mean(apply_lifetime(w, t, KEY, cfg)))
+          for t in (20.0, 2e2, 2e3, 2e4)]
+    assert all(a > b for a, b in zip(ms, ms[1:]))
+    # t < t0 clamps to the t0 read (drift undefined before programming)
+    early = apply_lifetime(w, 1.0, KEY, cfg)
+    ref = apply_lifetime(w, cfg.drift_t0 + 0.0, KEY, cfg)
+    assert np.array_equal(np.asarray(early), np.asarray(ref))
+
+
+def test_drift_deterministic_across_calls_and_jit():
+    """Hash-RNG draws are frozen per (key, shape): re-reading at the same
+    t returns the same array, jitted or not."""
+    w = jax.random.normal(KEY, (32, 32), jnp.float32)
+    a = apply_lifetime(w, 1e6, KEY, PCM)
+    b = apply_lifetime(w, 1e6, KEY, PCM)
+    fn = jax.jit(lambda x: apply_lifetime(x, 1e6, KEY, PCM))
+    c, d = fn(w), fn(w)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(c), np.asarray(d))
+    # eager vs jit may differ by fusion reordering, but only in the ULPs
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_read_noise_scales_with_tensor_amplitude():
+    """read_noise is a conductance-range fraction: the model-space sigma
+    follows the tensor's amplitude."""
+    cfg = DeviceConfig(kind="softbounds", read_noise=0.01, drift_t0=1.0)
+    t = 100.0
+    for amp in (0.05, 5.0):
+        w = amp * jnp.ones((512, 512), jnp.float32)
+        noise = np.asarray(apply_lifetime(w, t, KEY, cfg)) - amp
+        assert np.std(noise) == pytest.approx(cfg.read_noise * amp, rel=0.1)
+
+
+# ------------------------------------------------------------- programming
+
+
+def test_program_weights_state_dependent_sigma():
+    """Open-loop (prog_rounds=1) error std follows sigma_p(w) =
+    prog_noise + prog_noise_slope * |w|."""
+    cfg = DeviceConfig(kind="softbounds", tau_min=100.0, tau_max=100.0,
+                       prog_noise=0.01, prog_noise_slope=0.08, prog_rounds=1)
+    for target in (0.0, 0.5, 2.0):
+        w = jnp.full((512, 512), target, jnp.float32)
+        err = np.asarray(program_weights(w, KEY, cfg)) - target
+        want = cfg.prog_noise + cfg.prog_noise_slope * abs(target)
+        assert np.std(err) == pytest.approx(want, rel=0.1)
+
+
+def test_program_weights_verify_rounds_contract_error():
+    """Write-and-verify shrinks the residual vs open-loop programming."""
+    base = dict(kind="softbounds", tau_min=100.0, tau_max=100.0,
+                prog_noise=0.02, prog_noise_slope=0.1, read_noise=0.002)
+    w = jax.random.normal(KEY, (256, 256), jnp.float32)
+    rms = []
+    for rounds in (1, 3):
+        cfg = DeviceConfig(prog_rounds=rounds, **base)
+        rms.append(float(jnp.sqrt(jnp.mean(
+            (program_weights(w, KEY, cfg) - w) ** 2))))
+    assert rms[1] < 0.35 * rms[0], rms
+
+
+def test_program_weights_noop_without_noise():
+    cfg = DeviceConfig(kind="softbounds")
+    w = jax.random.normal(KEY, (16, 16), jnp.float32)
+    assert program_weights(w, KEY, cfg) is w
+
+
+# --------------------------------------------------------------------- GDC
+
+
+def test_signature_chunking_invariant():
+    """The scan-chunked signature equals the direct one-shot reduction
+    (padding rows contribute nothing)."""
+    w = jax.random.normal(KEY, (37, 19), jnp.float32)  # rows % chunks != 0
+    direct = float(weight_signature(w, chunks=1))
+    for chunks in (2, 4, 8):
+        assert float(weight_signature(w, chunks=chunks)) == \
+            pytest.approx(direct, rel=1e-5)
+
+
+def test_gdc_alpha_recovers_global_scale():
+    w = jax.random.normal(KEY, (64, 64), jnp.float32)
+    params = {"stack": {"w": w}}
+    sig0 = {p: float(v) for p, v in
+            signature_tree(params, ("stack/w",)).items()}
+    aged = {"stack": {"w": 0.425 * w}}
+    corrected, scales = correct_params(aged, sig0)
+    assert scales["stack/w"] == pytest.approx(1.0 / 0.425, rel=1e-4)
+    err = np.abs(np.asarray(corrected["stack"]["w"]) - np.asarray(w))
+    assert float(err.max()) < 1e-4
+
+
+def test_gdc_t0_bit_exact_roundtrip():
+    """signature -> json float -> alpha == 1.0 -> multiply is a no-op."""
+    w = jax.random.normal(KEY, (48, 32), jnp.float32)
+    params = {"w": w}
+    sig = signature_tree(params, ("w",))
+    stored = json.loads(json.dumps({p: float(v) for p, v in sig.items()}))
+    corrected, scales = correct_params(params, stored)
+    assert scales["w"] == 1.0
+    assert np.array_equal(np.asarray(corrected["w"]), np.asarray(w))
+
+
+def test_gdc_reduces_drift_error_at_one_year():
+    cfg = PCM
+    w = 0.05 * jax.random.normal(KEY, (128, 128), jnp.float32)
+    params = {"w": w}
+    sig0 = {p: float(v) for p, v in signature_tree(params, ("w",)).items()}
+    aged = {"w": apply_lifetime(w, cfg.drift_t0 + 31557600.0,
+                                path_key(KEY, "w"), cfg)}
+    corrected, scales = correct_params(aged, sig0)
+    err_raw = float(jnp.mean(jnp.abs(aged["w"] - w)))
+    err_gdc = float(jnp.mean(jnp.abs(corrected["w"] - w)))
+    assert scales["w"] > 1.5          # a year of nu~0.06 drift
+    assert err_gdc < 0.5 * err_raw    # global scale removes most of it
+
+
+def test_age_params_only_touches_mapped_paths():
+    w = jax.random.normal(KEY, (8, 8), jnp.float32)
+    b = jnp.ones((8,), jnp.float32)
+    tree = {"layer": {"w": w, "b": b}}
+    out = age_params(tree, {"layer/w": PCM}, 31557600.0, KEY)
+    assert not np.array_equal(np.asarray(out["layer"]["w"]), np.asarray(w))
+    assert out["layer"]["b"] is b
+
+
+def test_path_key_distinct_per_path():
+    k1 = path_key(KEY, "stack.0.attn.wq")
+    k2 = path_key(KEY, "stack.1.attn.wq")
+    assert not np.array_equal(np.asarray(k1), np.asarray(k2))
+
+
+# ------------------------------------------------------- serve CLI plumbing
+
+
+def test_parse_age_units():
+    from repro.launch.serve import parse_age
+
+    assert parse_age("0") == 0.0
+    assert parse_age("90s") == 90.0
+    assert parse_age("1.5h") == pytest.approx(5400.0)
+    assert parse_age("1yr") == pytest.approx(31557600.0)
+    with pytest.raises(ValueError):
+        parse_age("10 parsecs")
+    with pytest.raises(ValueError):
+        parse_age("fast")
+
+
+def test_presets_lifetime_fields_are_sane():
+    for name, cfg in PRESETS.items():
+        assert cfg.drift_nu >= 0.0 and cfg.drift_nu_std >= 0.0
+        assert cfg.drift_t0 > 0.0 and cfg.prog_rounds >= 1
+        assert cfg.read_noise >= 0.0 and cfg.prog_noise >= 0.0
+    assert PRESETS["ideal"].drift_nu == 0.0
+    assert not ldrift.has_lifetime(PRESETS["ideal"])
+    assert ldrift.has_lifetime(PRESETS["pcm_gst"])
+
+
+def test_reference_input_fixed_and_positive():
+    x = np.asarray(lgdc.reference_input(257))
+    y = np.asarray(lgdc.reference_input(257))
+    assert np.array_equal(x, y)
+    assert (x >= 0.5).all() and (x < 1.0).all()
